@@ -1,0 +1,215 @@
+"""Analytic reproductions of the paper's tables.
+
+Each function reproduces one table's derivation from first principles and
+asserts agreement with the paper's published numbers. These are the
+validation of the *faithful reproduction* (EXPERIMENTS.md §Paper-validation):
+the paper has no code or measurements — its claims ARE these derivations.
+"""
+from __future__ import annotations
+
+import math
+
+# ---------------------------------------------------------------------------
+# Table 6 / Section 13: CASCADE wave schedule
+# ---------------------------------------------------------------------------
+
+def cascade_schedule(batches: int = 32_768, rows_total: int = 24_576,
+                     cols: int = 8_192, rows_per_array: int = 64,
+                     hilt_load: int = 17, broadcast: int = 7,
+                     sipo: int = 16, hilt_write: int = 4,
+                     adder: str = "sequential") -> dict:
+    """Cycle-accurate analytic model of one TRIMERA matmul wave (Table 6).
+
+    sequential: partial sums ripple through all arrays (one clock per array).
+    tree:       parallel adder-tree alternative (Section 13.3).
+    """
+    arrays = rows_total // rows_per_array
+    fill = hilt_load + broadcast                      # clocks 1..24
+    if adder == "sequential":
+        pipe = rows_per_array + arrays                # 64 + 384
+    else:
+        pipe = rows_per_array + math.ceil(math.log2(arrays)) + 1
+    first_done = fill + pipe                          # batch 1 complete
+    last_done = first_done + batches - 1
+    total = last_done + sipo + hilt_write
+    useful = 2.0 * batches * rows_total * cols        # MAC = 2 ops
+    capacity = 2.0 * total * rows_total * cols
+    return {
+        "arrays": arrays,
+        "first_batch_done": first_done,
+        "last_batch_done": last_done,
+        "total_cycles": total,
+        "useful_flops": useful,
+        "efficiency": useful / capacity,
+        "wave_us": total / 12e9 * 1e6,
+    }
+
+
+def bench_table6() -> dict:
+    seq = cascade_schedule()
+    tree = cascade_schedule(adder="tree")
+    # Paper: 33,260 cycles total (2.77 us), 13,194,139,533,312 FLOPs, 98.52%;
+    # adder-tree alternative: 32,885 cycles, 99.64%.
+    assert abs(seq["total_cycles"] - 33_260) <= 1, seq["total_cycles"]
+    assert seq["useful_flops"] == 13_194_139_533_312.0
+    assert abs(seq["efficiency"] - 0.9852) < 2e-4, seq["efficiency"]
+    assert abs(seq["wave_us"] - 2.77) < 0.01
+    assert abs(tree["total_cycles"] - 32_885) <= 12, tree["total_cycles"]
+    assert abs(tree["efficiency"] - 0.9964) < 1e-3
+    return {"sequential_cycles": seq["total_cycles"],
+            "sequential_eff": round(seq["efficiency"], 4),
+            "tree_cycles": tree["total_cycles"],
+            "tree_eff": round(tree["efficiency"], 4)}
+
+
+# ---------------------------------------------------------------------------
+# Tables 8/9/10: Llama 3.1 405B inference FLOPs & weight-loading balance
+# ---------------------------------------------------------------------------
+
+ZETTALITH_PEAK_SPARSE = 1_507_534e15        # FLOP/s (Table 2)
+ZETTALITH_HBM_BW = 2.56e14                  # B/s (512 TW/s FP4 weights = 256 TB/s)
+
+def llama31_405b_inference_ops(B: int = 1024, L: int = 2000) -> dict:
+    """Reproduces Table 9 row-by-row (paper counts MACs as 'OPs', no x2)."""
+    d, h, V, N = 16384, 128, 128_000, 80
+    dff = 4 * d
+    rows = {
+        "embed_lookup": B * L * d,
+        "rope": B * L * d,
+        "ln_pre_attn": B * N * L * d,
+        "qkv_proj": B * N * L * 3 * d * d,
+        "attn_score": B * N * h * L * L,
+        "softmax": B * N * h * L * L,
+        "value_weight": B * N * h * L * L * (d // h),
+        "out_proj": B * N * L * d * d,
+        "residual_1": B * N * L * d,
+        "ln_pre_ffn": B * N * L * d,
+        "ffn_up": B * N * L * d * dff,
+        "ffn_gate": B * N * L * d * dff,
+        "swiglu": B * N * L * dff,
+        "ffn_down": B * N * L * dff * d,
+        "residual_2": B * N * L * d,
+        "final_ln": B * L * d,
+        "lm_head": B * 1 * d * V,
+    }
+    weights = {
+        "embed": V * d,
+        "ln_pre_attn": N * d,
+        "qkv_proj": N * 3 * d * d,
+        "out_proj": N * d * d,
+        "ln_pre_ffn": N * d,
+        "ffn_up": N * d * dff,
+        "ffn_gate": N * d * dff,
+        "ffn_down": N * dff * d,
+        "final_ln": d,
+        "lm_head": V * d,
+    }
+    total_ops = sum(rows.values())
+    total_weights = sum(weights.values())
+    return {"rows": rows, "weights": weights,
+            "total_ops": total_ops, "total_weights": total_weights}
+
+
+def bench_table9_10() -> dict:
+    r = llama31_405b_inference_ops()
+    # Paper: total 7.09E+17 OPs; total weights 3.48E+11; QKV row 1.32E+17;
+    # FFN rows 1.76E+17 each; compute 0.00059 s at 80% peak; weights (FP4,
+    # 0.5 B/weight) from HBM 0.00068 s at 2.56e14 B/s.
+    assert abs(r["rows"]["qkv_proj"] / 1.32e17 - 1) < 0.01
+    assert abs(r["rows"]["ffn_up"] / 1.76e17 - 1) < 0.01
+    assert abs(r["total_ops"] / 7.09e17 - 1) < 0.01, r["total_ops"]
+    assert abs(r["total_weights"] / 3.48e11 - 1) < 0.01, r["total_weights"]
+    t_compute = r["total_ops"] / (0.8 * ZETTALITH_PEAK_SPARSE)
+    t_weights = (r["total_weights"] * 0.5) / ZETTALITH_HBM_BW
+    assert abs(t_compute / 0.00059 - 1) < 0.02, t_compute
+    assert abs(t_weights / 0.00068 - 1) < 0.02, t_weights
+    # the paper's point: at B=1024 the two are balanced (within ~15%)
+    assert 0.5 < t_compute / t_weights < 1.5
+    return {"total_ops": r["total_ops"], "total_weights": r["total_weights"],
+            "t_compute_s": round(t_compute, 6), "t_weights_s": round(t_weights, 6)}
+
+
+def balanced_batch_size(peak_flops: float, hbm_bw: float, mfu: float = 0.8,
+                        weight_bytes_per_param: float = 0.5) -> float:
+    """The paper's weight-reuse rule (Section 14.2) generalized: the DECODE
+    batch size B* at which compute time equals weight-streaming time.
+    Per step: compute 2*N*B FLOPs, stream w*N bytes; N and the chip count
+    cancel:  B* = (w/2) * mfu * peak / bw.  ZettaLith (Table 10): ~1,024;
+    one TPU v5e chip at FP4 weights: ~48."""
+    return (weight_bytes_per_param / 2.0) * mfu * peak_flops / hbm_bw
+
+
+# ---------------------------------------------------------------------------
+# Tables 1 & 20: rack-level comparison
+# ---------------------------------------------------------------------------
+
+def bench_table1_20() -> dict:
+    # Table 20 raw values
+    gpu = {"pflops_sparse": 1_440, "power_kw": 120, "pe_cycles_phz": 360,
+           "fabric_tbs": 259, "accelerators": 72}
+    zl = {"pflops_sparse": 1_507_534, "power_kw": 84.305, "pe_cycles_phz": 376_883,
+          "fabric_tbs": 7_800, "accelerators": 156}
+    perf_ratio = zl["pflops_sparse"] / gpu["pflops_sparse"]
+    power_eff_ratio = (zl["pflops_sparse"] / zl["power_kw"]) / \
+        (gpu["pflops_sparse"] / gpu["power_kw"])
+    assert abs(perf_ratio / 1047 - 1) < 0.01, perf_ratio
+    assert abs(power_eff_ratio / 1490 - 1) < 0.01, power_eff_ratio
+
+    # Table 1 factor products ("sanity check" per the paper)
+    perf_factors = [3.86, 2.08, 2.94, 1.92, 3.12, 3.91, 1.00, 1.89]
+    pw_factors = [3.86, 1.28, 2.94, 1.92, 4.37, 4.75, 1.00, 2.56]
+    cost_factors = [3.86, 2.08, 2.94, 2.97, 4.37, 3.91, 1.51, 1.29]
+    pf = math.prod(perf_factors)
+    pwf = math.prod(pw_factors)
+    cf = math.prod(cost_factors)
+    # the paper adjusts factors so products match the direct totals
+    assert abs(pf / 1047 - 1) < 0.02, pf
+    assert abs(pwf / 1490 - 1) < 0.02, pwf
+    assert abs(cf / 2325 - 1) < 0.02, cf
+    return {"perf_ratio": round(perf_ratio, 1), "power_eff_ratio": round(power_eff_ratio, 1),
+            "factor_products": [round(pf, 0), round(pwf, 0), round(cf, 0)]}
+
+
+# ---------------------------------------------------------------------------
+# Tables 2/4/5: PE area/power/performance chain
+# ---------------------------------------------------------------------------
+
+def bench_pe_model() -> dict:
+    # Table 4: area
+    a16_density_mtr_mm2 = 344.0
+    transistors = 505
+    min_area_um2 = transistors / a16_density_mtr_mm2  # MTr/mm^2 == Tr/um^2
+    full_custom = min_area_um2 / 2.1
+    assert abs(min_area_um2 - 1.47) < 0.01
+    assert abs(full_custom - 0.70) < 0.005
+
+    # Table 5: power  P = alpha * C * V^2 * f
+    c_fF = 46.0 / 2.2                 # full-custom optimized capacitance
+    v, f = 0.7, 12e9
+    sparsity = 0.90
+    alpha = 0.10 * (1 - sparsity) + 0.04 * sparsity   # = 0.046
+    peak_use = 0.753
+    p_n3e = alpha * (c_fF * 1e-15) * v * v * f * peak_use
+    assert abs(p_n3e / 4.3e-6 - 1) < 0.03, p_n3e
+    p_a16 = p_n3e * 0.53
+    assert abs(p_a16 / 2.3e-6 - 1) < 0.05, p_a16
+
+    # Table 2: performance chain
+    pes_per_sld = 203e6                               # power/area limited
+    pe_gflops = 2 * 12e9                              # 1 MAC = 2 ops @12GHz
+    sld_dense = pes_per_sld * pe_gflops               # ~4.87e18
+    active_rows, active_cols, arrays = 64, 8192, 384
+    active_pes = active_rows * active_cols * arrays   # 201,326,592
+    trimera_dense = active_pes * pe_gflops
+    zl_dense = trimera_dense * 156
+    assert abs(zl_dense / 753e18 - 1) < 0.01, zl_dense
+    zl_sparse = 2 * zl_dense
+    assert abs(zl_sparse / 1.507e21 - 1) < 0.01
+    total_pes = active_pes * 156
+    assert total_pes == 31_406_948_352                # Section 12.2
+    pe_power_kw = total_pes * p_a16 / 1e3
+    assert abs(pe_power_kw / 72 - 1) < 0.05, pe_power_kw
+    return {"pe_area_um2": round(full_custom, 2), "pe_power_uw": round(p_a16 * 1e6, 2),
+            "zl_dense_exaflops": round(zl_dense / 1e18, 1),
+            "zl_sparse_exaflops": round(zl_sparse / 1e18, 1),
+            "total_pes": total_pes, "pe_power_kw": round(pe_power_kw, 1)}

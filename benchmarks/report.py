@@ -1,0 +1,65 @@
+"""Render the §Roofline tables (baseline / faithful / optimized) as markdown.
+
+Run after the sweeps:
+  PYTHONPATH=src:. python -m benchmarks.report > results/roofline_report.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path):
+    if not os.path.exists(path):
+        return {}
+    return {(r["arch"], r["shape"]): r for r in json.load(open(path))}
+
+
+def main():
+    base = load("results/roofline_baseline.json")
+    faith = load("results/roofline_faithful.json")
+    opt = load("results/roofline_optimized.json")
+
+    print("# Roofline report (single-pod 16x16, per-device per-step)\n")
+    print("fraction = compute term / dominant term; terms in seconds.\n")
+    hdr = ("| arch | shape | baseline frac | faithful frac | optimized frac | "
+           "opt dominant | opt compute_s | opt memory_s | opt collective_s | "
+           "opt peak GB | useful ratio |")
+    print(hdr)
+    print("|" + "---|" * 11)
+    for key in sorted(base.keys()):
+        b = base[key]
+        if b["status"] == "skipped":
+            print(f"| {key[0]} | {key[1]} | N/A (full attention, long_500k) "
+                  f"| | | | | | | | |")
+            continue
+        f = faith.get(key, {})
+        o = opt.get(key, {})
+        fo = o.get("roofline_fraction", "—") if o.get("status") == "ok" else "FAIL"
+        ff = f.get("roofline_fraction", "—") if f.get("status") == "ok" else "FAIL"
+        t = o.get("terms_s", {})
+        mem = o.get("memory", {}) or {}
+        peak = (mem.get("peak_bytes") or 0) / 1e9
+        print(f"| {key[0]} | {key[1]} | {b['roofline_fraction']} | {ff} | {fo} "
+              f"| {o.get('dominant','—')} | {t.get('compute','—')} | {t.get('memory','—')} "
+              f"| {t.get('collective','—')} | {peak:.1f} | {o.get('useful_flops_ratio','—')} |")
+
+    # CASCADE invariant check: forward graphs with zero all-reduce bytes
+    print("\n## CASCADE zero-partial-sum invariant (faithful preset)\n")
+    viol = []
+    for key, f in faith.items():
+        if f.get("status") != "ok" or key[1] == "train_4k":
+            continue
+        ar = f["collectives_corrected"]["all-reduce"]["bytes"]
+        if ar > 1e9:
+            viol.append((key, ar))
+    if viol:
+        print("all-reduce >1GB found in (MoE dispatch reductions — see DESIGN.md):")
+        for (a, s), ar in viol:
+            print(f"- {a} x {s}: {ar/1e9:.1f} GB")
+    else:
+        print("No serving-graph all-reduce above 1 GB/device anywhere.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""CascadeLinear — the paper's contribution as a composable JAX module.
+
+A linear layer whose weights can live in three formats:
+
+* ``train``     — bf16 dense weights; forward optionally applies FP4
+                  fake-quant (QAT, paper Section 4).
+* ``serve_fp4`` — packed FP4 codes + per-(group, column) scales; forward
+                  dequantizes on the fly (XLA path) or calls the Pallas
+                  kernel (TPU path). This is the paper-faithful serving
+                  format: 4 bits/weight in HBM.
+* ``bf16``      — plain dense baseline (the "GPU rack" reference point).
+
+Distribution follows the CASCADE principle: the **output-column dimension is
+the unit of parallelism** (PartitionSpec puts the last weight dim on the
+``model`` mesh axis) so partial sums never cross chips — see
+``repro.distributed.sharding`` for the policy table and the Megatron-style
+baseline it is compared against.
+
+All functions are functional (params are plain pytrees) so they compose with
+pjit / scan / remat without framework baggage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    """Behavior of every CascadeLinear in a model."""
+    mode: str = "train"            # train | serve_fp4 | bf16
+    qat: bool = False              # fake-quant weights during training
+    group_size: int = 0            # 0 => per-output-column scales
+    use_kernel: bool = False       # Pallas kernel (TPU) vs XLA dequant-matmul
+    precision_sim: bool = False    # bit-accurate FP8-accum path (tests only)
+    compute_dtype: Any = jnp.bfloat16
+    kv_dtype: Any = jnp.bfloat16   # KV/state cache dtype (fp8 = half the
+                                   # decode memory term; industry-standard)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def linear_init(key: jax.Array, d_in: int, d_out: int, cfg: CascadeConfig,
+                use_bias: bool = False, scale: Optional[float] = None) -> dict:
+    """Create params for one linear layer in the configured format."""
+    scale = scale if scale is not None else 1.0 / (d_in ** 0.5)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return linear_from_dense(w, cfg, bias=jnp.zeros((d_out,), jnp.float32) if use_bias else None)
+
+
+def linear_from_dense(w: jax.Array, cfg: CascadeConfig, bias: Optional[jax.Array] = None) -> dict:
+    """Convert a dense (d_in, d_out) weight into the configured param format."""
+    if cfg.mode == "serve_fp4":
+        packed, scales = quant.quantize_weight(w, cfg.group_size)
+        p = {"codes": packed, "scale": scales}
+    else:
+        p = {"w": w.astype(cfg.compute_dtype)}
+    if bias is not None:
+        p["b"] = bias.astype(jnp.float32)
+    return p
+
+
+def linear_abstract(d_in: int, d_out: int, cfg: CascadeConfig, use_bias: bool = False) -> dict:
+    """ShapeDtypeStruct tree matching linear_init (for eval_shape-free spec building)."""
+    if cfg.mode == "serve_fp4":
+        g = (d_in // cfg.group_size) if cfg.group_size > 0 else 1
+        p = {
+            "codes": jax.ShapeDtypeStruct((d_in // 2, d_out), jnp.uint8),
+            "scale": jax.ShapeDtypeStruct((g, d_out), jnp.float32),
+        }
+    else:
+        p = {"w": jax.ShapeDtypeStruct((d_in, d_out), cfg.compute_dtype)}
+    if use_bias:
+        p["b"] = jax.ShapeDtypeStruct((d_out,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def linear_apply(params: dict, x: jax.Array, cfg: CascadeConfig) -> jax.Array:
+    """y = x @ W (+ b) under the configured format/precision."""
+    from repro.distributed.sharding import constrain_matmul_input
+    x = constrain_matmul_input(x)
+    b = params.get("b")
+    if cfg.mode == "serve_fp4":
+        if cfg.precision_sim:
+            # Bit-accurate CASCADE: FP4 activations, FP5 products, FP8 column sums.
+            w = quant.dequantize_weight(params["codes"], params["scale"], jnp.float32)
+            xs = jnp.max(jnp.abs(x)) / quant.FP4_MAX
+            x4 = quant.fp4_decode(quant.fp4_encode(x / xs))
+            # scales factored out of the FP8 accumulation like the paper's
+            # column-end scaling; weights re-normalized to FP4 grid per column.
+            ws = jnp.max(jnp.abs(w), axis=0, keepdims=True) / quant.FP4_MAX
+            ws = jnp.where(ws > 0, ws, 1.0)
+            w4 = quant.fp4_decode(quant.fp4_encode(w / ws))
+            out = quant.cascade_matmul_exact(x4, w4)
+            out = out * (xs * ws)
+            if b is not None:
+                out = out + b
+            return out.astype(cfg.compute_dtype)
+        if cfg.use_kernel:
+            from repro.kernels import ops  # lazy: keeps dryrun import-light
+            out = ops.cascade_matmul(x, params["codes"], params["scale"], b,
+                                     out_dtype=cfg.compute_dtype)
+            return out
+        w = quant.dequantize_weight(params["codes"], params["scale"], cfg.compute_dtype)
+        out = jnp.dot(x.astype(cfg.compute_dtype), w,
+                      preferred_element_type=jnp.float32)
+        if b is not None:
+            out = out + b
+        return out.astype(cfg.compute_dtype)
+
+    w = params["w"]
+    if cfg.qat and cfg.mode == "train":
+        w = quant.fake_quant_fp4(w, cfg.group_size)
+    out = jnp.dot(x.astype(cfg.compute_dtype), w.astype(cfg.compute_dtype),
+                  preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b
+    return out.astype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# batched expert weights (MoE): leading E dim, FP4 per expert
+# ---------------------------------------------------------------------------
+
+def expert_linear_init(key: jax.Array, n_experts: int, d_in: int, d_out: int,
+                       cfg: CascadeConfig) -> dict:
+    keys = jax.random.split(key, n_experts)
+    scale = 1.0 / (d_in ** 0.5)
+
+    def one(k):
+        w = jax.random.normal(k, (d_in, d_out), jnp.float32) * scale
+        return linear_from_dense(w, cfg)
+
+    return jax.vmap(one)(keys)
+
+
+def expert_linear_apply(params: dict, x: jax.Array, cfg: CascadeConfig) -> jax.Array:
+    """x: (E, C, d_in) -> (E, C, d_out); expert e uses its own weight."""
+    if cfg.mode == "serve_fp4":
+        w = jax.vmap(lambda c, s: quant.dequantize_weight(c, s, cfg.compute_dtype))(
+            params["codes"], params["scale"])
+    else:
+        w = params["w"]
+        if cfg.qat and cfg.mode == "train":
+            w = jax.vmap(lambda wi: quant.fake_quant_fp4(wi, cfg.group_size))(w)
+    out = jnp.einsum("ecd,edf->ecf", x.astype(cfg.compute_dtype), w.astype(cfg.compute_dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(cfg.compute_dtype)
+
+
+def linear_weight(params: dict, cfg: CascadeConfig) -> jax.Array:
+    """Dense (d_in, d_out) weight view of a CascadeLinear (used by MLA's
+    weight-absorption decode path which needs the raw matrix)."""
+    if cfg.mode == "serve_fp4":
+        return quant.dequantize_weight(params["codes"], params["scale"], cfg.compute_dtype)
+    return params["w"].astype(cfg.compute_dtype)
+
+
+def tree_to_serve_fp4(params, cfg: CascadeConfig):
+    """Convert a whole trained param tree (bf16/f32 dense) into the FP4
+    serving format: every {"w"[, "b"]} linear dict becomes
+    {"codes", "scale"[, "b"]}. Handles stacked layers (L, K, N) and stacked
+    experts (L, E, K, N) by vmapping the quantizer over leading dims.
+    Embeddings, norms, convs and routers stay dense."""
+    import functools
+
+    def conv(d):
+        if isinstance(d, dict) and "w" in d and hasattr(d["w"], "ndim"):
+            w = d["w"]
+            qfn = functools.partial(quant.quantize_weight, group_size=cfg.group_size)
+            for _ in range(w.ndim - 2):
+                qfn = jax.vmap(qfn)
+            codes, scale = qfn(w.astype(jnp.float32))
+            out = {"codes": codes, "scale": scale}
+            if "b" in d:
+                out["b"] = d["b"]
+            return out
+        if isinstance(d, dict):
+            return {k: conv(v) for k, v in d.items()}
+        if isinstance(d, list):
+            return [conv(v) for v in d]
+        return d
+
+    return conv(params)
+
+
+def num_weight_bytes(params: dict) -> int:
+    """HBM bytes of the weight payload (the quantity Table 10 balances)."""
+    total = 0
+    for k, v in params.items():
+        total += v.size * v.dtype.itemsize
+    return total

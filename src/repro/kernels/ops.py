@@ -1,0 +1,103 @@
+"""Jit'd public wrappers for the Pallas kernels (padding, defaults, backend
+dispatch). ``interpret=True`` is selected automatically off-TPU so the same
+call sites work in CI (CPU) and production (TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cascade_matmul as _cm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def cascade_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    scales: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """FP4-packed weight matmul: x (.., K) @ Wq (K, N) -> (.., N).
+
+    Leading dims of x are flattened to M and padded to block_m; K and N must
+    already be block-aligned (true for every assigned architecture dim).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    n = packed.shape[1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    x2 = _pad_to(x2, 0, block_m)
+    bias2 = jnp.zeros((1, n), jnp.float32) if bias is None else bias.reshape(1, n).astype(jnp.float32)
+    # shrink blocks if dims are small (smoke configs)
+    bm = min(block_m, x2.shape[0])
+    bn = block_n if n % block_n == 0 else n
+    bk = block_k if (kdim % block_k == 0 and (kdim // scales.shape[0]) % block_k == 0) else kdim // scales.shape[0]
+    out = _cm.cascade_matmul_pallas(
+        x2, packed, scales, bias2,
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out[:m].reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked attention, GQA-aware. q: (B,Hq,S,D), k/v: (B,Hkv,S,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _fa.flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool | None = None):
+    """Per-head SSD recurrence (inputs pre-broadcast per head). (BH,S,P)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _ssd.ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)
+
+
+# Re-exported oracles (tests and low-stakes call sites)
+cascade_matmul_ref = _ref.cascade_matmul_ref
+flash_attention_ref = _ref.flash_attention_ref
+ssd_scan_ref = _ref.ssd_scan_ref

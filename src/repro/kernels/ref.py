@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def cascade_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    scales: jax.Array,
+    bias: jax.Array | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for the fast (fp32-accumulating) CASCADE matmul.
+
+    x: (M, K) activations; packed: (K//2, N) FP4 codes; scales: (G, N).
+    Dequantizes to f32 and matmuls with f32 accumulation.
+    """
+    w = quant.dequantize_weight(packed, scales, dtype=jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True, scale: float | None = None
+) -> jax.Array:
+    """Oracle attention. q: (B, Hq, S, D), k/v: (B, Hkv, S, D). GQA via head
+    group broadcast. Returns (B, Hq, S, D) in q.dtype."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array, D: jax.Array | None = None
+) -> jax.Array:
+    """Oracle Mamba-2 SSD (state-space dual) scan, sequential recurrence.
+
+    Shapes (single batch element handled via vmap by callers):
+      x:  (S, H, P)    inputs per head
+      dt: (S, H)       softplus'd step sizes (>0)
+      A:  (H,)         negative scalar per head (A = -exp(a_log))
+      B:  (S, G, N)    input projections (G state groups, broadcast over H//G)
+      C:  (S, G, N)    output projections
+      D:  (H,) or None skip connection
+    Returns y: (S, H, P).
+    """
+    s, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    heads_per_group = h // g
+
+    def step(state, inputs):
+        xt, dtt, Bt, Ct = inputs  # (H,P), (H,), (G,N), (G,N)
+        Bh = jnp.repeat(Bt, heads_per_group, axis=0)  # (H, N)
+        Ch = jnp.repeat(Ct, heads_per_group, axis=0)
+        decay = jnp.exp(dtt * A)  # (H,)
+        state = state * decay[:, None, None] + (dtt[:, None] * xt)[..., None] * Bh[:, None, :]
+        y = jnp.einsum("hpn,hn->hp", state, Ch)
+        return state, y
+
+    state0 = jnp.zeros((h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        state0,
+        (x.astype(jnp.float32), dt.astype(jnp.float32), B.astype(jnp.float32), C.astype(jnp.float32)),
+    )
+    if D is not None:
+        ys = ys + D[None, :, None] * x.astype(jnp.float32)
+    return ys.astype(x.dtype)

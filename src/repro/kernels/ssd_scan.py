@@ -1,0 +1,85 @@
+"""Mamba-2 SSD scan — Pallas TPU kernel.
+
+Grid (batch*heads, n_chunks): the chunk dimension is sequential ("arbitrary")
+and the (P, N) SSM state lives in VMEM scratch across chunk iterations — the
+same carry-stays-on-chip dataflow CASCADE uses for partial sums. Within a
+chunk the recurrence runs as a fori_loop over the chunk's steps on VMEM
+tiles (HBM->VMEM staging via BlockSpec = the HILT analogue).
+
+Inputs are pre-broadcast per head (callers expand B/C groups):
+  x:  (BH, S, P)   dt: (BH, S)   A: (BH,)   B, C: (BH, S, N)   D: (BH,)
+Output y: (BH, S, P).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0]
+    dskip = d_ref[0]
+    x = x_ref[0].astype(jnp.float32)      # (q, P)
+    dt = dt_ref[0].astype(jnp.float32)    # (q,)
+    bb = b_ref[0].astype(jnp.float32)     # (q, N)
+    cc = c_ref[0].astype(jnp.float32)     # (q, N)
+
+    def step(i, carry):
+        state, ys = carry
+        decay = jnp.exp(dt[i] * a)
+        state = state * decay + (dt[i] * x[i])[:, None] * bb[i][None, :]   # (P,N)
+        y = state @ cc[i] + dskip * x[i]                                    # (P,)
+        ys = jax.lax.dynamic_update_slice(ys, y[None], (i, 0))
+        return state, ys
+
+    state0 = state_ref[...]
+    ys0 = jnp.zeros((chunk, x.shape[-1]), jnp.float32)
+    state, ys = jax.lax.fori_loop(0, chunk, step, (state0, ys0))
+    state_ref[...] = state
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = False):
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        params_cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+        kwargs["compiler_params"] = params_cls(
+            dimension_semantics=("parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1,), lambda h, c: (h,)),
+            pl.BlockSpec((1, chunk, n), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1,), lambda h, c: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)] if pltpu is not None else [],
+        interpret=interpret,
+        **kwargs,
+    )(x, dt, A, B, C, D)

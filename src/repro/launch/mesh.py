@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state. The single-pod mesh is 16x16 = 256 chips
+(data, model); the multi-pod mesh is 2x16x16 = 512 chips (pod, data, model),
+where the ``pod`` axis composes with ``data`` for batch sharding — the
+paper's optional multi-rack 800 GbE expansion (Section 17.1) maps to the
+pod axis' DCN-class links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh over however many devices exist (CPU tests)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,94 @@
+"""Training launcher.
+
+CPU smoke:      PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+                    --smoke --steps 20 --batch 8 --seq 64
+Production:     same CLI on a TPU pod slice; --mesh production selects the
+                16x16 mesh from launch/mesh.py and shards via
+                distributed/sharding.py (CASCADE policy by default).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.cascade import CascadeConfig
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import registry
+from repro.optim.adamw import AdamW
+from repro.train import checkpoint as ckpt
+from repro.train import loop as train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--qat", action="store_true", help="FP4 quantization-aware training")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--tp-policy", default="cascade", choices=["cascade", "megatron"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg, model = registry.load(args.arch, smoke=args.smoke)
+    compute = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
+    ccfg = CascadeConfig(mode="train", qat=args.qat, compute_dtype=compute)
+    opt = AdamW(lr=args.lr, warmup_steps=max(2, args.steps // 10), decay_steps=args.steps)
+
+    mesh = (make_production_mesh() if args.mesh == "production" else make_host_mesh())
+    data = SyntheticCorpus(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                      global_batch=args.batch))
+
+    state = train_loop.init_state(model, ccfg, opt)
+    start_step = 0
+    if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        pspecs = shd.param_specs(state.params, args.tp_policy)
+        shardings = train_loop.TrainState(
+            params=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                is_leaf=lambda x: isinstance(x, P)),
+            opt=None, step=None)
+        state, extra = ckpt.restore(state, args.ckpt_dir)
+        start_step = int(extra.get("data_step", 0))
+        print(f"resumed at step {start_step}")
+
+    step_fn = jax.jit(train_loop.make_train_step(
+        model, ccfg, opt, microbatches=args.microbatches,
+        remat=jax.default_backend() != "cpu"))
+
+    losses = []
+    t0 = time.time()
+    with mesh:
+        for i in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, data.batch_at(i))
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+            if i % args.log_every == 0 or i == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {i:5d} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['gnorm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} ({dt:.1f}s)", flush=True)
+            if args.ckpt_every and args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                ckpt.save(state, args.ckpt_dir, i + 1,
+                          extra={"data_step": i + 1}, async_=True)
+
+    print(f"final loss {np.mean(losses[-5:]):.4f} "
+          f"(first {np.mean(losses[:5]):.4f}) in {time.time() - t0:.1f}s")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local-attention
+hybrid, block pattern (R, R, A) repeating.
+
+Prefill runs the RG-LRU as a log-depth ``associative_scan`` (sub-quadratic —
+this arch runs the long_500k shape); decode is the O(1) recurrence.
+The 26 layers = 8 scanned (R, R, A) groups + a trailing (R, R) pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cascade
+from repro.core.cascade import CascadeConfig
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain_residual
+from repro.models import layers as L
+
+
+def _remat_policy(name: str):
+    import jax as _jax
+    return {
+        "dots": _jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "none": _jax.checkpoint_policies.nothing_saveable,
+        "save_all": _jax.checkpoint_policies.everything_saveable,
+    }[name]
+from repro.models.ssm import _causal_conv, _conv_decode
+
+_C = 8.0  # RG-LRU gate sharpness constant (Griffin paper)
+
+
+class GriffinLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.lru = cfg.lru_width or cfg.d_model
+        self.attn_cfg = L.AttnConfig(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            rope_theta=cfg.rope_theta,
+            window=cfg.window,
+            q_chunk=cfg.q_chunk,
+        )
+        pat = cfg.block_pattern or ("R", "R", "A")
+        self.group = pat
+        self.n_groups = cfg.n_layers // len(pat)
+        self.n_tail = cfg.n_layers - self.n_groups * len(pat)  # trailing R's
+
+    # ------------------------------------------------------------------ init
+    def _rblock_init(self, key, ccfg):
+        cfg = self.cfg
+        ks = jax.random.split(key, 7)
+        lru = self.lru
+        return {
+            "ln": L.norm_init(cfg.d_model, cfg.norm_type),
+            "w_in": cascade.linear_init(ks[0], cfg.d_model, lru, ccfg),
+            "w_gate": cascade.linear_init(ks[1], cfg.d_model, lru, ccfg),
+            "conv_w": jax.random.normal(ks[2], (cfg.conv_width, lru), jnp.float32) * 0.1,
+            "conv_b": jnp.zeros((lru,), jnp.float32),
+            "wa": cascade.linear_init(ks[3], lru, lru, ccfg, use_bias=True),
+            "wx": cascade.linear_init(ks[4], lru, lru, ccfg, use_bias=True),
+            "lam": jnp.linspace(2.0, 5.0, lru).astype(jnp.float32),  # softplus^-1(a) init
+            "w_out": cascade.linear_init(ks[5], lru, cfg.d_model, ccfg),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": L.mlp_init(ks[6], cfg.d_model, cfg.d_ff, cfg.mlp_kind, ccfg),
+        }
+
+    def _ablock_init(self, key, ccfg):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln": L.norm_init(cfg.d_model, cfg.norm_type),
+            "attn": L.attn_init(k1, self.attn_cfg, ccfg),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, ccfg),
+        }
+
+    def _group_init(self, key, ccfg):
+        ks = jax.random.split(key, len(self.group))
+        out = {}
+        for i, kind in enumerate(self.group):
+            out[f"b{i}"] = self._rblock_init(ks[i], ccfg) if kind == "R" else self._ablock_init(ks[i], ccfg)
+        return out
+
+    def init_params(self, key, ccfg):
+        cfg = self.cfg
+        keys = jax.random.split(key, self.n_groups + self.n_tail + 2)
+        params = {
+            "groups": jax.vmap(lambda k: self._group_init(k, ccfg))(keys[: self.n_groups]),
+            "tail": [self._rblock_init(keys[self.n_groups + i], ccfg) for i in range(self.n_tail)],
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+            "embed": L.embed_init(keys[-2], cfg.vocab, cfg.d_model, dtype=ccfg.compute_dtype),
+            "lm_head": cascade.linear_init(keys[-1], cfg.d_model, cfg.vocab, ccfg),
+        }
+        return params
+
+    # --------------------------------------------------------------- RG-LRU
+    def _rglru(self, lp, y, ccfg, h0=None, mode="full"):
+        """y: (b, s, lru) post-conv input. Returns (out, h_last)."""
+        r = jax.nn.sigmoid(cascade.linear_apply(lp["wa"], y, ccfg).astype(jnp.float32))
+        i = jax.nn.sigmoid(cascade.linear_apply(lp["wx"], y, ccfg).astype(jnp.float32))
+        log_a = -_C * r * jax.nn.softplus(lp["lam"])        # (b,s,lru) <= 0
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * y.astype(jnp.float32))
+        if mode == "decode":
+            h = a[:, 0] * h0 + gated[:, 0]
+            return h[:, None].astype(y.dtype), h
+        # associative scan: h_t = a_t h_{t-1} + g_t
+        def combine(c1, c2):
+            a1, g1 = c1
+            a2, g2 = c2
+            return a1 * a2, g1 * a2 + g2
+        aa, hh = lax.associative_scan(combine, (a, gated), axis=1)
+        if h0 is not None:
+            hh = hh + aa * h0[:, None]
+        return hh.astype(y.dtype), hh[:, -1]
+
+    def _rblock(self, lp, x, ccfg, cache=None, mode="full"):
+        cfg = self.cfg
+        u = L.norm_apply(lp["ln"], x, cfg.norm_type)
+        gate = jax.nn.gelu(cascade.linear_apply(lp["w_gate"], u, ccfg).astype(jnp.float32))
+        y = cascade.linear_apply(lp["w_in"], u, ccfg)
+        if mode == "decode":
+            y_c, new_conv = _conv_decode(y, cache["conv"], lp["conv_w"], lp["conv_b"])
+            out, h_last = self._rglru(lp, y_c, ccfg, cache["h"], mode)
+            new_cache = {"conv": new_conv, "h": h_last}
+        else:
+            y_c = _causal_conv(y, lp["conv_w"], lp["conv_b"])
+            out, h_last = self._rglru(lp, y_c, ccfg, None, mode)
+            new_cache = ({"conv": y[:, -(cfg.conv_width - 1):], "h": h_last}
+                         if mode == "prefill" else None)
+        mixed = cascade.linear_apply(lp["w_out"], (out.astype(jnp.float32) * gate).astype(x.dtype), ccfg)
+        x = x + mixed
+        x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type), cfg.mlp_kind, ccfg)
+        return constrain_residual(x), new_cache
+
+    def _ablock(self, lp, x, ccfg, cache=None, mode="full", max_len=None):
+        cfg = self.cfg
+        h, nc = L.attn_apply(lp["attn"], L.norm_apply(lp["ln"], x, cfg.norm_type),
+                             self.attn_cfg, ccfg, cache=cache, mode=mode, max_len=max_len)
+        x = x + h
+        x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type), cfg.mlp_kind, ccfg)
+        return constrain_residual(x), nc
+
+    def _group_apply(self, gp, x, ccfg, gcache=None, mode="full", max_len=None):
+        new_cache = {}
+        for i, kind in enumerate(self.group):
+            c = gcache[f"b{i}"] if gcache is not None else None
+            if kind == "R":
+                x, nc = self._rblock(gp[f"b{i}"], x, ccfg, c, mode)
+            else:
+                x, nc = self._ablock(gp[f"b{i}"], x, ccfg, c, mode, max_len)
+            new_cache[f"b{i}"] = nc
+        return x, new_cache
+
+    # --------------------------------------------------------------- api
+    def _head(self, params, x, ccfg):
+        x = L.norm_apply(params["final_norm"], x, self.cfg.norm_type)
+        return cascade.linear_apply(params["lm_head"], x, ccfg).astype(jnp.float32)
+
+    def forward(self, params, batch, ccfg, remat: bool = False,
+                remat_policy: str = "dots"):
+        x = L.embed_apply(params["embed"], batch["tokens"])
+
+        def body(x, gp):
+            y, _ = self._group_apply(gp, x, ccfg, None, "full")
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(remat_policy))
+        x, _ = lax.scan(body, x, params["groups"])
+        for tp in params["tail"]:
+            x, _ = self._rblock(tp, x, ccfg, None, "full")
+        return self._head(params, x, ccfg)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        lru = self.lru
+
+        def rcache(_):
+            return {"conv": jnp.zeros((batch, cfg.conv_width - 1, lru), dtype),
+                    "h": jnp.zeros((batch, lru), jnp.float32)}  # recurrence stays f32
+
+        def gcache(_):
+            out = {}
+            for i, kind in enumerate(self.group):
+                out[f"b{i}"] = (rcache(None) if kind == "R"
+                                else L.attn_cache_init(batch, max_len, self.attn_cfg, dtype))
+            return out
+
+        return {
+            "groups": jax.vmap(gcache)(jnp.arange(self.n_groups)),
+            "tail": [rcache(None) for _ in range(self.n_tail)],
+        }
+
+    def prefill(self, params, batch, ccfg, max_len: int | None = None):
+        x = L.embed_apply(params["embed"], batch["tokens"])
+
+        def body(x, gp):
+            y, c = self._group_apply(gp, x, ccfg, None, "prefill", max_len)
+            return y, c
+
+        x, gcaches = lax.scan(body, x, params["groups"])
+        tail_caches = []
+        for tp in params["tail"]:
+            x, tc = self._rblock(tp, x, ccfg, None, "prefill")
+            tail_caches.append(tc)
+        logits = self._head(params, x[:, -1:], ccfg)
+        return logits, {"groups": gcaches, "tail": tail_caches}
+
+    def decode_step(self, params, batch, cache, ccfg):
+        x = L.embed_apply(params["embed"], batch["tokens"])
+
+        def body(x, scanned):
+            gp, c = scanned
+            y, nc = self._group_apply(gp, x, ccfg, c, "decode")
+            return y, nc
+
+        x, new_g = lax.scan(body, x, (params["groups"], cache["groups"]))
+        new_tail = []
+        for tp, tc in zip(params["tail"], cache["tail"]):
+            x, nc = self._rblock(tp, x, ccfg, tc, "decode")
+            new_tail.append(nc)
+        logits = self._head(params, x, ccfg)
+        return logits, {"groups": new_g, "tail": new_tail}

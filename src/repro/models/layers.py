@@ -1,0 +1,337 @@
+"""Shared neural-net layers for all assigned architectures.
+
+Functional style: ``*_init(key, ...) -> params`` and ``*_apply(params, x, ...)``.
+Every dense projection goes through :mod:`repro.core.cascade` so the paper's
+FP4 serving format / QAT / column-parallel distribution apply uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cascade
+from repro.core.cascade import CascadeConfig
+from repro.distributed.sharding import constrain_attn_queries
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, norm_type: str = "rmsnorm") -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(params: dict, x: jax.Array, norm_type: str = "rmsnorm", eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (incl. partial-rotary and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0) -> jax.Array:
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv  # (rot/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32. Rotates the first
+    2*len(inv_freq) channels, passes the rest through (partial rotary)."""
+    rot2 = inv_freq.shape[0]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (B, S, r/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., : 2 * rot2], x[..., 2 * rot2:]
+    x1, x2 = x_rot[..., :rot2], x_rot[..., rot2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) for (t, h, w); the
+    inv_freq bands are split into ``sections`` (in half-dim units), each band
+    rotated by its own position stream (arXiv:2409.12191)."""
+    rot2 = inv_freq.shape[0]
+    ang_all = positions[..., None].astype(jnp.float32) * inv_freq  # (3, B, S, r/2)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i % 3, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, r/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., : 2 * rot2], x[..., 2 * rot2:]
+    x1, x2 = x_rot[..., :rot2], x_rot[..., rot2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / MHA / local-window), full-seq and cached-decode paths
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    window: int = 0              # 0 = full causal; >0 = local attention window
+    mrope_sections: tuple = ()   # Qwen2-VL
+    softmax_scale: Optional[float] = None
+    q_chunk: int = 0             # chunked attention for long prefill (0 = off)
+
+
+def attn_init(key: jax.Array, cfg: AttnConfig, ccfg: CascadeConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": cascade.linear_init(ks[0], d, h * hd, ccfg, use_bias=cfg.qkv_bias),
+        "wk": cascade.linear_init(ks[1], d, hk * hd, ccfg, use_bias=cfg.qkv_bias),
+        "wv": cascade.linear_init(ks[2], d, hk * hd, ccfg, use_bias=cfg.qkv_bias),
+        "wo": cascade.linear_init(ks[3], h * hd, d, ccfg),
+    }
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,S,H,D), k/v: (B,T,Hkv,D), mask: (S, T) bool or None."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    dv = v.shape[-1]  # may differ from q head dim (MLA)
+    qf = constrain_attn_queries(q.astype(jnp.float32)).reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qf, k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(b, s, h, dv)
+
+
+def _chunked_causal_sdpa(q, k, v, scale, q_chunk, window, q_offset=0):
+    """Online-softmax attention over query chunks: memory O(q_chunk * T)
+    instead of O(S * T). Pure jnp + lax.map — the XLA analogue of the flash
+    kernel, used at lowering time for 32k prefill where the naive (S,S)
+    logits tensor would be petabytes."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    nq = s // q_chunk
+    qc = q.reshape(b, nq, q_chunk, hkv, g, d)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    def one_chunk(i):
+        qi = constrain_attn_queries(qc[:, i].astype(jnp.float32))  # (B, qc, Hkv, g, D)
+        logits = jnp.einsum("bshgd,bthd->bhgst", qi, kf) * scale
+        rows = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        cols = jnp.arange(t)
+        m = rows[:, None] >= cols[None, :]
+        if window > 0:
+            m &= (rows[:, None] - cols[None, :]) < window
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgst,bthd->bshgd", p, vf).reshape(b, q_chunk, h, vf.shape[-1])
+
+    out = jax.lax.map(one_chunk, jnp.arange(nq))  # (nq, B, qc, H, Dv)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, v.shape[-1])
+
+
+def attn_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: AttnConfig,
+    ccfg: CascadeConfig,
+    positions: jax.Array | None = None,
+    cache: dict | None = None,
+    mode: str = "full",
+    max_len: int | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Attention with three modes:
+
+    * ``full``    — causal (optionally windowed) self-attention, no cache.
+    * ``prefill`` — same compute as ``full`` but also RETURNS a KV cache
+                    (ring-aligned for windowed archs) ready for decode.
+    * ``decode``  — single new token (s==1) against the cache; the cache
+                    buffer length equals the dry-run shape's seq_len for
+                    full attention, or the window for local attention
+                    (ring buffer, slot(p) = p %% window).
+    """
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = cascade.linear_apply(params["wq"], x, ccfg).reshape(b, s, h, hd)
+    k = cascade.linear_apply(params["wk"], x, ccfg).reshape(b, s, hk, hd)
+    v = cascade.linear_apply(params["wv"], x, ccfg).reshape(b, s, hk, hd)
+
+    if positions is None:
+        pos0 = cache["pos"] if cache is not None else 0
+        positions = pos0 + jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+
+    inv = rope_freqs(hd, cfg.rope_theta, cfg.rope_fraction)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, inv, cfg.mrope_sections)
+        k = apply_mrope(k, positions, inv, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, inv)
+        k = apply_rope(k, positions, inv)
+
+    scale = cfg.softmax_scale or 1.0 / (hd ** 0.5)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        pos = cache["pos"]
+        t = cache["k"].shape[1]
+        if cfg.window > 0:  # ring buffer
+            idx = pos % t
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None].astype(jnp.int32), (idx,))
+            valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < cfg.window)
+            new_cache = {"k": ck, "v": cv, "pos": pos + 1, "slot_pos": slot_pos}
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            valid = jnp.arange(t) <= pos
+            new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+        qd = q.astype(jnp.float32).reshape(b, s, hk, h // hk, hd)
+        logits = jnp.einsum("bshgd,bthd->bhgst", qd, ck.astype(jnp.float32)) * scale
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgst,bthd->bshgd", p, cv.astype(jnp.float32)).reshape(b, s, h, hd)
+    else:
+        if cfg.q_chunk > 0 and s > cfg.q_chunk:
+            o = _chunked_causal_sdpa(q, k, v, scale, cfg.q_chunk, cfg.window)
+        else:
+            rows = jnp.arange(s)
+            m = rows[:, None] >= rows[None, :]
+            if cfg.window > 0:
+                m &= (rows[:, None] - rows[None, :]) < cfg.window
+            o = _sdpa(q, k, v, m, scale)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _build_cache_from_prefill(k, v, cfg, s, max_len=max_len)
+
+    out = cascade.linear_apply(params["wo"], o.astype(x.dtype).reshape(b, s, h * hd), ccfg)
+    return out, new_cache
+
+
+def _build_cache_from_prefill(k: jax.Array, v: jax.Array, cfg: AttnConfig, s: int,
+                              max_len: int | None = None) -> dict:
+    """Construct a decode-ready cache from prefill K/V (positions 0..s-1)."""
+    b, _, hk, hd = k.shape
+    if cfg.window > 0:
+        t = cfg.window
+        if s >= t:
+            k_last, v_last = k[:, s - t:], v[:, s - t:]
+            pos_last = jnp.arange(s - t, s, dtype=jnp.int32)
+        else:
+            pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+            k_last, v_last = jnp.pad(k, pad), jnp.pad(v, pad)
+            pos_last = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                                        jnp.full((t - s,), -1, jnp.int32)])
+        shift = s % t if s >= t else 0
+        return {
+            "k": jnp.roll(k_last, shift, axis=1),
+            "v": jnp.roll(v_last, shift, axis=1),
+            "slot_pos": jnp.roll(pos_last, shift),
+            "pos": jnp.int32(s),
+        }
+    t = max_len if max_len is not None else s
+    pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
+    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad), "pos": jnp.int32(s)}
+
+
+def attn_cache_init(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.window > 0:
+        t = min(max_len, cfg.window)
+        return {
+            "k": jnp.zeros((batch, t, hk, hd), dtype),
+            "v": jnp.zeros((batch, t, hk, hd), dtype),
+            "slot_pos": jnp.full((t,), -1, jnp.int32),
+            "pos": jnp.int32(0),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, hk, hd), dtype),
+        "v": jnp.zeros((batch, max_len, hk, hd), dtype),
+        "pos": jnp.int32(0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d: int, d_ff: int, kind: str, ccfg: CascadeConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": cascade.linear_init(ks[0], d, d_ff, ccfg),
+            "w_up": cascade.linear_init(ks[1], d, d_ff, ccfg),
+            "w_down": cascade.linear_init(ks[2], d_ff, d, ccfg),
+        }
+    # relu2 (nemotron squared-ReLU) / gelu (musicgen)
+    return {
+        "w_up": cascade.linear_init(ks[0], d, d_ff, ccfg),
+        "w_down": cascade.linear_init(ks[1], d_ff, d, ccfg),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, kind: str, ccfg: CascadeConfig) -> jax.Array:
+    if kind == "swiglu":
+        g = cascade.linear_apply(params["w_gate"], x, ccfg)
+        u = cascade.linear_apply(params["w_up"], x, ccfg)
+        h = jax.nn.silu(g) * u
+    elif kind == "geglu":
+        g = cascade.linear_apply(params["w_gate"], x, ccfg)
+        u = cascade.linear_apply(params["w_up"], x, ccfg)
+        h = jax.nn.gelu(g) * u
+    elif kind == "relu2":
+        u = cascade.linear_apply(params["w_up"], x, ccfg)
+        h = jnp.square(jax.nn.relu(u))
+    elif kind == "gelu":
+        u = cascade.linear_apply(params["w_up"], x, ccfg)
+        h = jax.nn.gelu(u)
+    else:
+        raise ValueError(kind)
+    return cascade.linear_apply(params["w_down"], h, ccfg)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed_apply(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def sinusoidal_positions(s: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None] + offset
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(jnp.bfloat16)

@@ -1,0 +1,351 @@
+"""Mixture-of-Experts LMs: DeepSeek-V2 (MLA + shared/routed experts, top-6)
+and OLMoE (GQA + 64 routed experts, top-8).
+
+Routing uses capacity-based scatter dispatch (no (T, E, C) one-hot tensor —
+the dispatch buffer is built with a scatter-add and read back with a gather,
+so memory is O(T*E) ints + O(E*C*d) activations; both shard cleanly: tokens
+on the ``data`` axis, experts on the ``model`` axis = expert parallelism).
+
+MLA (multi-head latent attention, arXiv:2405.04434): KV compressed to a
+512-dim latent + 64-dim decoupled RoPE key. Decode uses the weight-absorption
+identity (scores = (q W_k)·c_kv) so the cache stays in latent space —
+(kv_lora + rope) bytes/token instead of 2*H*head_dim.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cascade
+from repro.core.cascade import CascadeConfig
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain_expert_buffer, constrain_residual
+from repro.models import layers as L
+
+
+def _remat_policy(name: str):
+    import jax as _jax
+    return {
+        "dots": _jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "none": _jax.checkpoint_policies.nothing_saveable,
+        "save_all": _jax.checkpoint_policies.everything_saveable,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# routed-expert FFN
+# ---------------------------------------------------------------------------
+
+def moe_ffn_init(key: jax.Array, cfg: ArchConfig, ccfg: CascadeConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d, e, dff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02,
+        "wg": cascade.expert_linear_init(ks[1], e, d, dff, ccfg),
+        "wu": cascade.expert_linear_init(ks[2], e, d, dff, ccfg),
+        "wd": cascade.expert_linear_init(ks[3], e, dff, d, ccfg),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.mlp_init(ks[4], d, cfg.n_shared_experts * dff, "swiglu", ccfg)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = math.ceil(cfg.moe_capacity_factor * n_tokens * cfg.moe_top_k / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_ffn_apply(params: dict, x: jax.Array, cfg: ArchConfig, ccfg: CascadeConfig) -> jax.Array:
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.moe_top_k, cfg.n_experts
+    cap = _capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    logits = jnp.dot(xf.astype(jnp.float32), params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, k)                                  # (T, k)
+    if cfg.moe_renorm:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    flat_e = idx.reshape(-1)                                          # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos_in_e = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                                   flat_e[:, None], axis=1)[:, 0]     # (T*k,)
+    keep = pos_in_e < cap
+    dst = jnp.where(keep, flat_e * cap + pos_in_e, e * cap)           # OOB = dropped
+
+    xk = jnp.repeat(xf, k, axis=0)                                    # (T*k, d) token-major
+    buf = jnp.zeros((e * cap, d), xf.dtype).at[dst].add(xk, mode="drop")
+    buf = constrain_expert_buffer(buf.reshape(e, cap, d))
+
+    h = jax.nn.silu(cascade.expert_linear_apply(params["wg"], buf, ccfg).astype(jnp.float32))
+    h = (h * cascade.expert_linear_apply(params["wu"], buf, ccfg).astype(jnp.float32)).astype(buf.dtype)
+    out = constrain_expert_buffer(
+        cascade.expert_linear_apply(params["wd"], h, ccfg))           # (E, C, d)
+
+    outf = out.reshape(e * cap, d)
+    got = jnp.take(outf, jnp.minimum(dst, e * cap - 1), axis=0)
+    got = jnp.where(keep[:, None], got, 0.0)
+    y = jnp.sum((got.astype(jnp.float32)
+                 * gates.reshape(-1)[:, None]).reshape(t, k, d), axis=1)
+
+    if "shared" in params:
+        y = y + L.mlp_apply(params["shared"], xf, "swiglu", ccfg).astype(jnp.float32)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_init(key: jax.Array, cfg: ArchConfig, ccfg: CascadeConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "wq_a": cascade.linear_init(ks[0], d, cfg.q_lora, ccfg),
+        "q_norm": L.norm_init(cfg.q_lora),
+        "wq_b": cascade.linear_init(ks[1], cfg.q_lora, h * qk, ccfg),
+        "wkv_a": cascade.linear_init(ks[2], d, cfg.kv_lora + cfg.qk_rope_dim, ccfg),
+        "kv_norm": L.norm_init(cfg.kv_lora),
+        "wkv_b": cascade.linear_init(ks[3], cfg.kv_lora, h * (cfg.qk_nope_dim + cfg.v_head_dim), ccfg),
+        "wo": cascade.linear_init(ks[4], h * cfg.v_head_dim, d, ccfg),
+    }
+    return p
+
+
+def _mla_qkr(params, x, cfg, ccfg, positions):
+    """Shared q / latent-kv projection + rope. Returns q_nope, q_rope, c_kv, k_rope."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = cascade.linear_apply(params["wq_b"],
+                             L.norm_apply(params["q_norm"],
+                                          cascade.linear_apply(params["wq_a"], x, ccfg)),
+                             ccfg).reshape(b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    kv = cascade.linear_apply(params["wkv_a"], x, ccfg)
+    c_kv = L.norm_apply(params["kv_norm"], kv[..., : cfg.kv_lora])
+    k_rope = kv[..., cfg.kv_lora:][:, :, None, :]                     # (b,s,1,rope)
+    inv = L.rope_freqs(cfg.qk_rope_dim, cfg.rope_theta, 1.0)
+    q_rope = L.apply_rope(q_rope, positions, inv)
+    k_rope = L.apply_rope(k_rope, positions, inv)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len=None):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    pos0 = cache["pos"] if cache is not None else 0
+    positions = pos0 + jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, x, cfg, ccfg, positions)
+
+    wkv_b = cascade.linear_weight(params["wkv_b"], ccfg)              # (kv_lora, H*(nope+v))
+    wkv_b = wkv_b.reshape(cfg.kv_lora, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_k = wkv_b[..., : cfg.qk_nope_dim]                               # (lora, H, nope)
+    w_v = wkv_b[..., cfg.qk_nope_dim:]                                # (lora, H, v)
+
+    if mode == "decode":
+        assert s == 1
+        pos = cache["pos"]
+        ckv = lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        krp = lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0))
+        t = ckv.shape[1]
+        # weight absorption: stay in latent space
+        q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
+        scores = (jnp.einsum("bshl,btl->bhst", q_lat, ckv.astype(jnp.float32))
+                  + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), krp.astype(jnp.float32))) * scale
+        valid = jnp.arange(t) <= pos
+        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btl->bshl", p, ckv.astype(jnp.float32))
+        o = jnp.einsum("bshl,lhd->bshd", ctx, w_v.astype(jnp.float32))  # (b,s,H,v)
+        new_cache = {"c_kv": ckv, "k_rope": krp, "pos": pos + 1}
+    else:
+        # expand latents to per-head keys/values (prefill & train)
+        k_nope = jnp.einsum("btl,lhd->bthd", c_kv.astype(jnp.float32), w_k.astype(jnp.float32))
+        v = jnp.einsum("btl,lhd->bthd", c_kv.astype(jnp.float32), w_v.astype(jnp.float32))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope_dim))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        cd = ccfg.compute_dtype
+        if cfg.q_chunk > 0 and s > cfg.q_chunk:
+            o = L._chunked_causal_sdpa(q_full.astype(cd), k_full.astype(cd),
+                                       v.astype(cd), scale, cfg.q_chunk, 0)
+        else:
+            rows = jnp.arange(s)
+            m = rows[:, None] >= rows[None, :]
+            o = L._sdpa(q_full.astype(cd), k_full.astype(cd), v.astype(cd), m, scale)
+        o = o[..., : cfg.v_head_dim]
+        new_cache = None
+        if mode == "prefill":
+            t = max_len if max_len is not None else s
+            pad = [(0, 0), (0, t - s), (0, 0)]
+            new_cache = {"c_kv": jnp.pad(c_kv.astype(ccfg.compute_dtype), pad),
+                         "k_rope": jnp.pad(k_rope.astype(ccfg.compute_dtype), pad),
+                         "pos": jnp.int32(s)}
+
+    out = cascade.linear_apply(params["wo"], o.astype(x.dtype).reshape(b, s, h * cfg.v_head_dim), ccfg)
+    return out, new_cache
+
+
+def mla_cache_init(batch: int, max_len: int, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.int32(0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE LM (DeepSeek-V2 / OLMoE)
+# ---------------------------------------------------------------------------
+
+class MoELM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.use_mla = cfg.kv_lora > 0
+        if not self.use_mla:
+            self.attn_cfg = L.AttnConfig(
+                d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias,
+                rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk)
+
+    # ------------------------------------------------------------------ init
+    def _attn_init(self, key, ccfg):
+        return (mla_init(key, self.cfg, ccfg) if self.use_mla
+                else L.attn_init(key, self.attn_cfg, ccfg))
+
+    def _moe_layer_init(self, key, ccfg):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.norm_init(cfg.d_model, cfg.norm_type),
+            "attn": self._attn_init(k1, ccfg),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm_type),
+            "moe": moe_ffn_init(k2, cfg, ccfg),
+        }
+
+    def _dense_layer_init(self, key, ccfg):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.norm_init(cfg.d_model, cfg.norm_type),
+            "attn": self._attn_init(k1, ccfg),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.dense_d_ff or cfg.d_ff, "swiglu", ccfg),
+        }
+
+    def init_params(self, key, ccfg):
+        cfg = self.cfg
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        keys = jax.random.split(key, n_moe + cfg.first_dense_layers + 2)
+        params = {
+            "dense_layers": [self._dense_layer_init(keys[i], ccfg)
+                             for i in range(cfg.first_dense_layers)],
+            "layers": jax.vmap(lambda k: self._moe_layer_init(k, ccfg))(
+                keys[cfg.first_dense_layers: cfg.first_dense_layers + n_moe]),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+            "embed": L.embed_init(keys[-2], cfg.vocab, cfg.d_model, dtype=ccfg.compute_dtype),
+            "lm_head": cascade.linear_init(keys[-1], cfg.d_model, cfg.vocab, ccfg),
+        }
+        return params
+
+    # --------------------------------------------------------------- blocks
+    def _attn_apply(self, lp, x, ccfg, cache, mode, max_len=None):
+        if self.use_mla:
+            return mla_apply(lp, x, self.cfg, ccfg, cache, mode, max_len)
+        return L.attn_apply(lp, x, self.attn_cfg, ccfg, cache=cache, mode=mode, max_len=max_len)
+
+    def _block(self, lp, x, ccfg, cache, mode, moe: bool, max_len=None):
+        cfg = self.cfg
+        h, nc = self._attn_apply(lp["attn"], L.norm_apply(lp["ln1"], x, cfg.norm_type),
+                                 ccfg, cache, mode, max_len)
+        x = x + h
+        u = L.norm_apply(lp["ln2"], x, cfg.norm_type)
+        if moe:
+            x = x + self._moe_ffn(lp["moe"], u, ccfg)
+        else:
+            x = x + L.mlp_apply(lp["mlp"], u, "swiglu", ccfg)
+        return constrain_residual(x), nc
+
+    def _moe_ffn(self, lp_moe, u, ccfg):
+        """Dispatch strategy: shard_map expert parallelism when the launcher
+        installed a policy with moe_ep=True (kills the GSPMD scatter
+        all-reduce, see models/moe_shardmap.py); jit capacity-dispatch
+        otherwise (CPU tests / no mesh)."""
+        from repro.distributed.sharding import get_activation_policy
+        pol = get_activation_policy()
+        if pol and pol.get("moe_ep") and pol.get("mesh") is not None:
+            from repro.models.moe_shardmap import moe_ffn_apply_ep
+            return moe_ffn_apply_ep(lp_moe, u, self.cfg, ccfg, pol["mesh"],
+                                    batch_axes=pol["batch_axes"])
+        return moe_ffn_apply(lp_moe, u, self.cfg, ccfg)
+
+    # --------------------------------------------------------------- api
+    def _head(self, params, x, ccfg):
+        x = L.norm_apply(params["final_norm"], x, self.cfg.norm_type)
+        return cascade.linear_apply(params["lm_head"], x, ccfg).astype(jnp.float32)
+
+    def forward(self, params, batch, ccfg, remat: bool = False,
+                remat_policy: str = "dots"):
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        for dp in params["dense_layers"]:
+            x, _ = self._block(dp, x, ccfg, None, "full", moe=False)
+
+        def body(x, lp):
+            y, _ = self._block(lp, x, ccfg, None, "full", moe=True)
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(remat_policy))
+        x, _ = lax.scan(body, x, params["layers"])
+        return self._head(params, x, ccfg)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+
+        def one(_):
+            return (mla_cache_init(batch, max_len, cfg, dtype) if self.use_mla
+                    else L.attn_cache_init(batch, max_len, self.attn_cfg, dtype))
+
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        return {
+            "dense_layers": [one(None) for _ in range(cfg.first_dense_layers)],
+            "layers": jax.vmap(one)(jnp.arange(n_moe)),
+        }
+
+    def prefill(self, params, batch, ccfg, max_len: int | None = None):
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        dense_caches = []
+        for dp in params["dense_layers"]:
+            x, c = self._block(dp, x, ccfg, None, "prefill", moe=False, max_len=max_len)
+            dense_caches.append(c)
+
+        def body(x, lp):
+            y, c = self._block(lp, x, ccfg, None, "prefill", moe=True, max_len=max_len)
+            return y, c
+
+        x, caches = lax.scan(body, x, params["layers"])
+        logits = self._head(params, x[:, -1:], ccfg)
+        return logits, {"dense_layers": dense_caches, "layers": caches}
+
+    def decode_step(self, params, batch, cache, ccfg):
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        new_dense = []
+        for dp, dc in zip(params["dense_layers"], cache["dense_layers"]):
+            x, nc = self._block(dp, x, ccfg, dc, "decode", moe=False)
+            new_dense.append(nc)
+
+        def body(x, scanned):
+            lp, c = scanned
+            y, nc = self._block(lp, x, ccfg, c, "decode", moe=True)
+            return y, nc
+
+        x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = self._head(params, x, ccfg)
+        return logits, {"dense_layers": new_dense, "layers": new_caches}

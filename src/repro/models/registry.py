@@ -1,0 +1,61 @@
+"""arch id -> (config, model builder)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+
+ARCH_IDS = [
+    "mamba2_370m",
+    "recurrentgemma_2b",
+    "qwen25_32b",
+    "phi4_mini_3_8b",
+    "nemotron4_15b",
+    "codeqwen15_7b",
+    "deepseek_v2_236b",
+    "olmoe_1b_7b",
+    "musicgen_large",
+    "qwen2_vl_2b",
+]
+
+# CLI ids use dashes matching the assignment table
+ALIASES = {
+    "mamba2-370m": "mamba2_370m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2.5-32b": "qwen25_32b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "musicgen-large": "musicgen_large",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+}
+
+
+def canonical(arch_id: str) -> str:
+    return ALIASES.get(arch_id, arch_id)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch_id)}")
+    return mod.smoke() if smoke else mod.CONFIG
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "ssm":
+        from repro.models.ssm import Mamba2LM
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.griffin import GriffinLM
+        return GriffinLM(cfg)
+    if cfg.family == "moe":
+        from repro.models.moe import MoELM
+        return MoELM(cfg)
+    from repro.models.transformer import TransformerLM
+    return TransformerLM(cfg)
+
+
+def load(arch_id: str, smoke: bool = False):
+    cfg = get_config(arch_id, smoke)
+    return cfg, build_model(cfg)

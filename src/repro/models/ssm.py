@@ -1,0 +1,269 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) LM.
+
+Train/prefill use the **chunked dual form** (matmul-dominant: intra-chunk
+quadratic term + inter-chunk state carry over a short lax.scan) so FLOPs land
+on the MXU and the attention-free arch stays sub-quadratic: O(S * chunk) +
+O(S * state). Decode is the O(1) recurrence. The SSD scan kernel in
+``repro.kernels.ssd_scan``/ref mirrors the sequential recurrence as oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cascade
+from repro.core.cascade import CascadeConfig
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain_residual
+from repro.models import layers as L
+
+
+def _remat_policy(name: str):
+    import jax as _jax
+    return {
+        "dots": _jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "none": _jax.checkpoint_policies.nothing_saveable,
+        "save_all": _jax.checkpoint_policies.everything_saveable,
+    }[name]
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial_state=None):
+    """Chunked SSD. x: (b,s,h,p); dt: (b,s,h) (post-softplus); A: (h,) (<0);
+    B, C: (b,s,g,n); D: (h,). Returns (y: (b,s,h,p), final_state: (b,h,p,n)).
+    """
+    b, s_orig, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hb = h // g
+    q = min(chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:
+        # zero-padded steps have dt=0 => decay exp(0)=1 and zero input:
+        # the state passes through unchanged; padded outputs are sliced off.
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = zp(x), zp(dt), zp(B), zp(C)
+    s = s_orig + pad
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bh = jnp.repeat(B.astype(jnp.float32), hb, axis=2).reshape(b, nc, q, h, n)
+    Ch = jnp.repeat(C.astype(jnp.float32), hb, axis=2).reshape(b, nc, q, h, n)
+
+    dtA = dtf * A  # (b,nc,q,h)
+    cum = jnp.cumsum(dtA, axis=2)  # inclusive within chunk
+
+    # --- intra-chunk (quadratic in q) ---
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (b,nc,qi,qj,h)
+    ii = jnp.arange(q)
+    causal = ii[:, None] >= ii[None, :]
+    # mask BEFORE exp: exp of the (positive) j>i entries overflows to inf and
+    # where-of-inf poisons gradients with NaN
+    LL = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -1e30))
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)                # (b,nc,qi,qj,h)
+    scores = CB * LL * dtf[:, :, None, :, :]                     # * dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xf)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (b,nc,q,h)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", decay_to_end * dtf, Bh, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (b,nc,h)
+
+    # --- inter-chunk carry (short scan over nc) ---
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+              else initial_state.astype(jnp.float32))
+
+    def step(state, inp):
+        dcy, s_c = inp  # (b,h), (b,h,p,n)
+        new = state * dcy[:, :, None, None] + s_c
+        return new, state  # emit the state *before* this chunk
+
+    final_state, states_prev = lax.scan(
+        step, state0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S, 1, 0)))
+    states_prev = jnp.moveaxis(states_prev, 0, 1)                # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(cum), Ch, states_prev)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    if D is not None:
+        y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :s_orig].astype(x.dtype), final_state
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """Single-token recurrence. x: (b,1,h,p); dt: (b,1,h); B/C: (b,1,g,n);
+    state: (b,h,p,n). Returns (y: (b,1,h,p), new_state)."""
+    b, _, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hb = h // g
+    xf = x[:, 0].astype(jnp.float32)                     # (b,h,p)
+    dtf = dt[:, 0].astype(jnp.float32)                   # (b,h)
+    Bh = jnp.repeat(B[:, 0].astype(jnp.float32), hb, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(C[:, 0].astype(jnp.float32), hb, axis=1)
+    decay = jnp.exp(dtf * A)                             # (b,h)
+    new_state = state * decay[:, :, None, None] + \
+        (dtf[:, :, None] * xf)[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    if D is not None:
+        y = y + D[None, :, None] * xf
+    return y[:, None].astype(x.dtype), new_state
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds. x: (b,s,dim); w: (width,dim)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(xp[:, i:i + s] * w[i] for i in range(width))
+    return y + b
+
+
+def _conv_decode(x, conv_state, w, b):
+    """x: (b,1,dim); conv_state: (b,width-1,dim) holding previous inputs.
+    The cache may be stored in fp8 (kv_dtype); compute in x.dtype and store
+    back in the cache dtype."""
+    full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (b,width,dim)
+    y = jnp.einsum("bwd,wd->bd", full.astype(jnp.float32), w.astype(jnp.float32)) + b
+    new_state = full[:, 1:].astype(conv_state.dtype)
+    return y[:, None].astype(x.dtype), new_state
+
+
+class Mamba2LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.d_inner = cfg.d_inner or 2 * cfg.d_model
+        self.n_heads = self.d_inner // cfg.ssm_head_dim
+        self.conv_dim = self.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        self.d_in_proj = 2 * self.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + self.n_heads
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, key: jax.Array, ccfg: CascadeConfig) -> dict:
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        h = self.n_heads
+        return {
+            "ln": L.norm_init(cfg.d_model, cfg.norm_type),
+            "in_proj": cascade.linear_init(k1, cfg.d_model, self.d_in_proj, ccfg),
+            "conv_w": jax.random.normal(k2, (cfg.conv_width, self.conv_dim), jnp.float32) * 0.1,
+            "conv_b": jnp.zeros((self.conv_dim,), jnp.float32),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+            "dt_bias": jnp.zeros((h,), jnp.float32),
+            "D": jnp.ones((h,), jnp.float32),
+            "gnorm": L.norm_init(self.d_inner),
+            "out_proj": cascade.linear_init(k3, self.d_inner, cfg.d_model, ccfg),
+        }
+
+    def init_params(self, key: jax.Array, ccfg: CascadeConfig) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        params = {
+            "layers": jax.vmap(lambda k: self._layer_init(k, ccfg))(keys[: cfg.n_layers]),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+            "embed": L.embed_init(keys[-2], cfg.vocab, cfg.d_model, dtype=ccfg.compute_dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = cascade.linear_init(keys[-1], cfg.d_model, cfg.vocab, ccfg)
+        return params
+
+    # --------------------------------------------------------------- mixer
+    def _split_proj(self, zxbcdt):
+        di, g, n, h = self.d_inner, self.cfg.ssm_groups, self.cfg.ssm_state, self.n_heads
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di: di + self.conv_dim]
+        dt_raw = zxbcdt[..., di + self.conv_dim:]
+        return z, xbc, dt_raw
+
+    def _mixer(self, lp, u, ccfg, cache=None, mode="full"):
+        cfg = self.cfg
+        b, s, _ = u.shape
+        di, g, n, h = self.d_inner, cfg.ssm_groups, cfg.ssm_state, self.n_heads
+        p = cfg.ssm_head_dim
+        zxbcdt = cascade.linear_apply(lp["in_proj"], u, ccfg)
+        z, xbc, dt_raw = self._split_proj(zxbcdt)
+
+        if mode == "decode":
+            xbc_c, new_conv = _conv_decode(xbc, cache["conv"], lp["conv_w"], lp["conv_b"])
+        else:
+            xbc_c = _causal_conv(xbc, lp["conv_w"], lp["conv_b"])
+            new_conv = None  # prefill cache built below from the raw conv input
+        xbc_c = jax.nn.silu(xbc_c)
+        x = xbc_c[..., :di].reshape(b, -1, h, p)
+        B = xbc_c[..., di: di + g * n].reshape(b, -1, g, n)
+        C = xbc_c[..., di + g * n:].reshape(b, -1, g, n)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["A_log"])
+
+        if mode == "decode":
+            y, new_state = ssd_decode_step(x, dt, A, B, C, lp["D"], cache["state"])
+            new_cache = {"conv": new_conv, "state": new_state}
+        else:
+            y, final_state = ssd_chunked(x, dt, A, B, C, lp["D"], cfg.ssm_chunk)
+            new_cache = None
+            if mode == "prefill":
+                new_cache = {"conv": xbc[:, -(cfg.conv_width - 1):], "state": final_state}
+
+        y = y.reshape(b, -1, di)
+        y = L.norm_apply(lp["gnorm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype))
+        return cascade.linear_apply(lp["out_proj"], y, ccfg), new_cache
+
+    def _block(self, lp, x, ccfg, cache, mode):
+        h, nc = self._mixer(lp, L.norm_apply(lp["ln"], x, self.cfg.norm_type), ccfg, cache, mode)
+        return constrain_residual(x + h), nc
+
+    # --------------------------------------------------------------- api
+    def _head(self, params, x, ccfg):
+        cfg = self.cfg
+        x = L.norm_apply(params["final_norm"], x, cfg.norm_type)
+        if cfg.tie_embeddings:
+            logits = jnp.dot(x.astype(params["embed"]["table"].dtype), params["embed"]["table"].T,
+                             preferred_element_type=jnp.float32)
+        else:
+            logits = cascade.linear_apply(params["lm_head"], x, ccfg)
+        return logits.astype(jnp.float32)
+
+    def forward(self, params, batch, ccfg, remat: bool = False,
+                remat_policy: str = "dots"):
+        x = L.embed_apply(params["embed"], batch["tokens"])
+
+        def body(x, lp):
+            y, _ = self._block(lp, x, ccfg, None, "full")
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(remat_policy))
+        x, _ = lax.scan(body, x, params["layers"])
+        return self._head(params, x, ccfg)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        h, p, n = self.n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+        def one(_):
+            return {
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, self.conv_dim), dtype),
+                "state": jnp.zeros((batch, h, p, n), jnp.float32),  # recurrent acc stays f32
+            }
+
+        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers)), "pos": jnp.int32(0)}
+
+    def prefill(self, params, batch, ccfg, max_len: int | None = None):
+        def body(x, lp):
+            y, c = self._block(lp, x, ccfg, None, "prefill")
+            return y, c
+
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        x, caches = lax.scan(body, x, params["layers"])
+        logits = self._head(params, x[:, -1:], ccfg)
+        return logits, {"layers": caches, "pos": jnp.int32(batch["tokens"].shape[1])}
+
+    def decode_step(self, params, batch, cache, ccfg):
+        def body(x, scanned):
+            lp, c = scanned
+            y, nc = self._block(lp, x, ccfg, c, "decode")
+            return y, nc
+
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = self._head(params, x, ccfg)
+        return logits, {"layers": new_caches, "pos": cache["pos"] + 1}

@@ -1,0 +1,168 @@
+"""Generic decoder-only transformer LM.
+
+Covers the dense GQA/MHA families (qwen2.5-32b, phi4-mini, nemotron-4,
+codeqwen1.5) and the modality-stub backbones (musicgen-large [audio],
+qwen2-vl-2b [vlm] with M-RoPE). Layer params are stacked (L, ...) and the
+stack is lax.scan'ed (HLO stays small for 64-layer archs; the roofline
+harness corrects loop trip counts — see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cascade
+from repro.core.cascade import CascadeConfig
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain_residual
+from repro.models import layers as L
+
+
+def _remat_policy(name: str):
+    import jax as _jax
+    return {
+        "dots": _jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "none": _jax.checkpoint_policies.nothing_saveable,
+        "save_all": _jax.checkpoint_policies.everything_saveable,
+    }[name]
+
+
+class TransformerLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.attn_cfg = L.AttnConfig(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+            rope_theta=cfg.rope_theta,
+            rope_fraction=cfg.rope_fraction,
+            window=cfg.window,
+            mrope_sections=cfg.mrope_sections,
+            q_chunk=cfg.q_chunk,
+        )
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, key: jax.Array, ccfg: CascadeConfig) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.norm_init(cfg.d_model, cfg.norm_type),
+            "attn": L.attn_init(k1, self.attn_cfg, ccfg),
+            "ln2": L.norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, ccfg),
+        }
+
+    def init_params(self, key: jax.Array, ccfg: CascadeConfig) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        params = {
+            "layers": jax.vmap(lambda k: self._layer_init(k, ccfg))(keys[: cfg.n_layers]),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+        }
+        if not cfg.input_embeds:
+            params["embed"] = L.embed_init(keys[-2], cfg.vocab, cfg.d_model, dtype=ccfg.compute_dtype)
+        head_width = cfg.vocab * max(1, cfg.n_codebooks)
+        if cfg.tie_embeddings and not cfg.input_embeds:
+            pass  # logits via embed.T
+        else:
+            params["lm_head"] = cascade.linear_init(keys[-1], cfg.d_model, head_width, ccfg)
+        return params
+
+    # --------------------------------------------------------------- forward
+    def _embed(self, params: dict, batch: dict, ccfg: CascadeConfig) -> jax.Array:
+        cfg = self.cfg
+        if cfg.input_embeds:
+            x = batch["inputs_embeds"].astype(ccfg.compute_dtype)
+        else:
+            x = L.embed_apply(params["embed"], batch["tokens"])
+        if cfg.rope_fraction == 0.0:  # sinusoidal-position archs (musicgen)
+            s = x.shape[1]
+            pos0 = batch.get("pos_offset", 0)
+            x = x + L.sinusoidal_positions(s, cfg.d_model, pos0)[None].astype(x.dtype)
+        return x
+
+    def _head(self, params: dict, x: jax.Array, ccfg: CascadeConfig) -> jax.Array:
+        cfg = self.cfg
+        x = L.norm_apply(params["final_norm"], x, cfg.norm_type)
+        if cfg.tie_embeddings and not cfg.input_embeds:
+            logits = jnp.dot(x.astype(ccfg.compute_dtype), params["embed"]["table"].T,
+                             preferred_element_type=jnp.float32)
+        else:
+            logits = cascade.linear_apply(params["lm_head"], x, ccfg)
+        if cfg.n_codebooks:
+            b, s, _ = logits.shape
+            logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab)
+        return logits.astype(jnp.float32)
+
+    def _block(self, lp: dict, x: jax.Array, ccfg: CascadeConfig,
+               positions, cache, mode: str, max_len: int | None = None):
+        cfg = self.cfg
+        h, new_cache = L.attn_apply(
+            lp["attn"], L.norm_apply(lp["ln1"], x, cfg.norm_type),
+            self.attn_cfg, ccfg, positions=positions, cache=cache, mode=mode,
+            max_len=max_len)
+        x = x + h
+        x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type),
+                            cfg.mlp_kind, ccfg)
+        return constrain_residual(x), new_cache
+
+    def forward(self, params: dict, batch: dict, ccfg: CascadeConfig,
+                remat: bool = False, remat_policy: str = "dots") -> jax.Array:
+        """Full-sequence forward (train / no-cache eval)."""
+        cfg = self.cfg
+        x = self._embed(params, batch, ccfg)
+        positions = batch.get("positions")
+
+        def body(x, lp):
+            y, _ = self._block(lp, x, ccfg, positions, None, "full")
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(remat_policy))
+        if cfg.scan_layers:
+            x, _ = lax.scan(body, x, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                x, _ = body(x, lp)
+        return self._head(params, x, ccfg)
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        one = lambda _: L.attn_cache_init(batch, max_len, self.attn_cfg, dtype)
+        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+
+    def prefill(self, params: dict, batch: dict, ccfg: CascadeConfig,
+                max_len: int | None = None):
+        cfg = self.cfg
+        x = self._embed(params, batch, ccfg)
+        positions = batch.get("positions")
+
+        def body(x, lp):
+            y, c = self._block(lp, x, ccfg, positions, None, "prefill", max_len=max_len)
+            return y, c
+
+        x, caches = lax.scan(body, x, params["layers"])
+        logits = self._head(params, x[:, -1:], ccfg)
+        return logits, {"layers": caches}
+
+    def decode_step(self, params: dict, batch: dict, cache: dict, ccfg: CascadeConfig):
+        cfg = self.cfg
+        x = self._embed(params, batch, ccfg)
+        positions = batch.get("positions")
+
+        def body(x, scanned):
+            lp, c = scanned
+            y, nc = self._block(lp, x, ccfg, positions, c, "decode")
+            return y, nc
+
+        x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = self._head(params, x, ccfg)
+        return logits, {"layers": new_caches}

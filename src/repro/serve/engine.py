@@ -1,0 +1,163 @@
+"""Serving engine: continuous batching over a fixed slot grid, FP4 weights,
+prefill/decode split, CREST runtime fault detection, straggler mitigation.
+
+The ZettaLith analogy (paper Sections 14, 19-20): a rack serves one model
+from resident (HBM) FP4 weights; batch size is chosen to balance HBM weight
+streaming against compute (Table 9/10); CREST continuously shadow-tests
+columns; failed components are mapped out without draining traffic.
+
+Software mapping: ``ServeEngine`` owns a slot grid of ``max_batch`` decode
+streams. Each step: (1) admit queued requests into free slots via prefill,
+(2) decode one token for every active slot, (3) optionally run a CREST probe
+on the lm_head matmul, (4) retire finished streams. ``elastic.py`` handles
+replica failure by re-queueing in-flight requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crest
+from repro.core.cascade import CascadeConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    created_at: float = 0.0
+    tokens_out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    eos_id: int = -1              # -1: only stop at max_new_tokens
+    crest_enabled: bool = False
+    crest_every: int = 4          # run a BIST probe wave every N engine steps
+    crest_cfg: crest.CrestConfig = dataclasses.field(default_factory=crest.CrestConfig)
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, model, params, ccfg: CascadeConfig, scfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.ccfg = ccfg
+        self.scfg = scfg
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * scfg.max_batch
+        self.caches: List[Any] = [None] * scfg.max_batch
+        self.crest_state = None
+        self.fault_mask = None          # set by tests/demos to inject faults
+        self._probe_w = None
+        self._steps = 0
+        if scfg.crest_enabled:
+            self._probe_w = self._dense_head_weight()
+            self.crest_state = crest.crest_init(self._probe_w.shape[1], scfg.crest_cfg)
+        self._decode_fn = jax.jit(
+            lambda p, t, c: model.decode_step(p, {"tokens": t}, c, ccfg))
+        self.step_times: list = []
+
+    def _dense_head_weight(self):
+        """Dense view of the lm_head weight used for CREST BIST probes
+        (paper Section 20.6: CREST doubles as POST/BIST with test vectors)."""
+        from repro.core import cascade as C
+        head = self.params.get("lm_head")
+        if head is None:
+            return None
+        return C.linear_weight(head, self.ccfg)
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: Request):
+        req.created_at = time.monotonic()
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.scfg.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, cache = self.model.prefill(
+                    self.params, {"tokens": toks}, self.ccfg, max_len=self.scfg.max_len)
+                nxt = int(jnp.argmax(logits[0, -1]))
+                req.tokens_out.append(nxt)
+                self.slots[i] = req
+                self.caches[i] = cache
+
+    # --------------------------------------------------------------- decode
+    def _active(self):
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def step(self) -> int:
+        """One engine step; returns number of tokens produced."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return 0
+        t0 = time.monotonic()
+        produced = 0
+        self._steps += 1
+        if self.scfg.crest_enabled and self._steps % self.scfg.crest_every == 0:
+            self._crest_probe()
+        for i in active:  # slot-wise decode (per-slot caches keep failover simple)
+            req = self.slots[i]
+            tok = jnp.asarray([[req.tokens_out[-1]]], jnp.int32)
+            logits, self.caches[i] = self._decode_fn(self.params, tok, self.caches[i])
+            nxt = int(jnp.argmax(logits[0, -1] if logits.ndim == 3 else logits[0, -1, 0]))
+            req.tokens_out.append(nxt)
+            produced += 1
+            if len(req.tokens_out) >= req.max_new_tokens or nxt == self.scfg.eos_id:
+                req.done = True
+                self.slots[i] = None
+                self.caches[i] = None
+        self.step_times.append(time.monotonic() - t0)
+        return produced
+
+    def _crest_probe(self):
+        """BIST probe wave (paper Section 20.6): run the CREST-protected
+        matmul on the lm_head weight with pseudo-random test activations;
+        detected faults accumulate in ``crest_state`` and are repaired via
+        spare recomputation. ``fault_mask`` lets demos inject defects."""
+        if self._probe_w is None:
+            return
+        key = jax.random.PRNGKey(self._steps)
+        x = jax.random.normal(key, (4, self._probe_w.shape[0]), jnp.float32)
+        _, self.crest_state = crest.crest_matmul(
+            x, self._probe_w.astype(jnp.float32), self.crest_state,
+            self.scfg.crest_cfg, self.fault_mask)
+
+    def crest_report(self) -> dict:
+        if self.crest_state is None:
+            return {}
+        return {"confirmed_faults": int(self.crest_state.confirmed_faults.sum()),
+                "repaired": int(self.crest_state.n_repaired)}
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        seen = set()
+        for _ in range(max_steps):
+            active_before = [r for r in self.slots if r is not None]
+            self.step()
+            for r in active_before:
+                if r.done and id(r) not in seen:
+                    seen.add(id(r))
+                    finished.append(r)
+            if len(self.queue) == 0 and not self._active():
+                break
+        return finished
+
+    # ----------------------------------------------------- straggler guard
+    def straggler_p99(self) -> float:
+        if not self.step_times:
+            return 0.0
+        return float(np.percentile(np.asarray(self.step_times), 99))

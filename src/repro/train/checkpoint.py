@@ -1,0 +1,106 @@
+"""Checkpoint/restart for fault tolerance at cluster scale.
+
+Numpy-file based (no external deps): each pytree leaf is one ``.npy`` under
+``step_N/``, with a JSON manifest of flattened key-paths, shapes, dtypes and
+the data-pipeline cursor. Properties needed at 1000+ nodes:
+
+* **async save** — a snapshot is taken on host (device_get) and written by a
+  background thread; training continues immediately.
+* **atomic publish** — writes go to ``step_N.tmp/`` and are renamed only
+  after fsync, so a node failure mid-save never corrupts the latest
+  checkpoint; restore picks the newest complete step.
+* **elastic restore** — leaves are loaded host-side and ``device_put`` with
+  whatever sharding the *new* mesh prescribes, so a job can restart on a
+  different pod count (the paper's fail-in-place at rack scale = drop a pod,
+  re-mesh, continue).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        names.append("/".join(parts))
+        leaves.append(leaf)
+    return names, leaves, jax.tree_util.tree_structure(tree)
+
+
+def save(tree: Any, directory: str, step: int, extra: Optional[dict] = None,
+         async_: bool = False) -> Optional[threading.Thread]:
+    """Snapshot ``tree`` and write it to ``directory/step_{step}``."""
+    names, leaves, _ = _flatten_with_names(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    def _write():
+        tmp = os.path.join(directory, f"step_{step}.tmp")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
+        for i, (name, arr) in enumerate(zip(names, host_leaves)):
+            fn = f"leaf_{i}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            manifest["leaves"].append(
+                {"name": name, "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(tree_like: Any, directory: str, step: Optional[int] = None,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``tree_like``. ``shardings``: optional
+    matching tree of jax.sharding.Sharding for elastic re-mesh placement."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    names, leaves, treedef = _flatten_with_names(tree_like)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    shard_leaves = (jax.tree_util.tree_leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for name, like, shd in zip(names, leaves, shard_leaves):
+        e = by_name[name]
+        arr = np.load(os.path.join(d, e["file"]))
+        assert tuple(arr.shape) == tuple(like.shape), f"{name}: {arr.shape} vs {like.shape}"
+        arr = arr.astype(like.dtype) if hasattr(like, "dtype") else arr
+        out.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,132 @@
+"""Tests for the roofline analysis pipeline: HLO trip-count correction,
+analytic FLOPs/params model vs real param trees, shape applicability, and a
+subprocess end-to-end dry-run cell."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_hlo_analysis_corrects_scan_trip_count():
+    """cost_analysis counts a while body once; the structural analyzer must
+    recover trip_count x body dot FLOPs exactly."""
+    sys.path.insert(0, REPO)
+    from benchmarks import hlo_analysis
+
+    L, M, K = 12, 32, 64
+
+    def f(x, ws):
+        def step(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(step, x, ws)
+        return out.sum()
+
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                            jax.ShapeDtypeStruct((L, K, K), jnp.float32)).compile()
+    r = hlo_analysis.analyze(comp.as_text())
+    expected = L * 2 * M * K * K
+    assert r["dot_flops"] == expected, (r["dot_flops"], expected)
+    # and the uncorrected number is exactly one iteration
+    assert r["dot_flops_uncorrected"] == expected / L
+
+
+def test_param_count_matches_real_init():
+    """Analytic param_count (used for MODEL_FLOPS) vs the actual full-config
+    param tree, via eval_shape (no allocation)."""
+    from repro.core import flops as F
+    from repro.core.cascade import CascadeConfig
+    from repro.models import registry
+
+    ccfg = CascadeConfig(mode="train")
+    for arch in ["qwen2.5-32b", "phi4-mini-3.8b", "olmoe-1b-7b", "mamba2-370m",
+                 "deepseek-v2-236b", "recurrentgemma-2b", "musicgen-large"]:
+        cfg, model = registry.load(arch)
+        shapes = jax.eval_shape(lambda m=model: m.init_params(jax.random.PRNGKey(0), ccfg))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        analytic = F.param_count(cfg)["total"]
+        rel = abs(actual - analytic) / actual
+        assert rel < 0.015, f"{arch}: analytic {analytic:.3e} vs actual {actual:.3e} ({rel:.3%})"
+
+
+def test_known_param_totals():
+    """Sanity anchors: the archs' nominal sizes."""
+    from repro.core import flops as F
+    from repro.models import registry
+    expect = {"qwen2.5-32b": (30e9, 36e9), "phi4-mini-3.8b": (3.3e9, 4.4e9),
+              "deepseek-v2-236b": (220e9, 250e9), "olmoe-1b-7b": (6.0e9, 7.5e9),
+              "mamba2-370m": (0.3e9, 0.45e9), "nemotron-4-15b": (14e9, 17e9)}
+    for arch, (lo, hi) in expect.items():
+        total = F.param_count(registry.get_config(arch))["total"]
+        assert lo < total < hi, f"{arch}: {total:.3e} outside [{lo:.1e},{hi:.1e}]"
+    ds = F.param_count(registry.get_config("deepseek-v2-236b"))
+    assert 18e9 < ds["active"] < 25e9  # DeepSeek-V2: ~21B active
+
+
+def test_shape_applicability_covers_40_cells():
+    from repro.configs import base as cfgbase
+    from repro.models import registry
+    cells = [(a, s) for a in registry.ALIASES for s in cfgbase.SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if cfgbase.shape_applicable(
+        registry.get_config(c[0]), cfgbase.SHAPES[c[1]])]
+    skipped = [c for c in cells if c not in runnable]
+    assert len(runnable) == 32 and len(skipped) == 8  # 8 full-attn archs skip long_500k
+    # exactly the sub-quadratic archs keep long_500k
+    keep = {a for (a, s) in runnable if s == "long_500k"}
+    assert keep == {"mamba2-370m", "recurrentgemma-2b"}
+
+
+def test_input_specs_all_cells_no_allocation():
+    from repro.configs import base as cfgbase
+    from repro.models import registry
+    for a in registry.ALIASES:
+        cfg = registry.get_config(a)
+        for s in cfgbase.SHAPES.values():
+            specs = cfgbase.input_specs(cfg, s)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+            if cfg.input_embeds:
+                assert "inputs_embeds" in specs and "tokens" not in specs
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess_single_and_megatron():
+    """End-to-end: a real dry-run cell on a 256-virtual-device mesh in a
+    fresh interpreter (XLA_FLAGS must be set before jax init), both TP
+    policies."""
+    for policy in ["cascade", "megatron"]:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "qwen2-vl-2b", "--shape", "decode_32k",
+             "--tp-policy", policy],
+            cwd=REPO, env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+            capture_output=True, text=True, timeout=900)
+        assert proc.returncode == 0, proc.stdout[-800:] + proc.stderr[-800:]
+        rec = json.loads([l for l in proc.stdout.splitlines() if l.startswith("{")][0])
+        assert rec["status"] == "ok" and rec["tp_policy"] == policy
+        assert rec["memory"]["peak_bytes"] < 16e9
+
+
+@pytest.mark.slow
+def test_train_and_serve_cli_subprocess():
+    """The launchers run end-to-end from their CLIs (the deployment path)."""
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    t = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "phi4-mini-3.8b",
+         "--smoke", "--steps", "6", "--batch", "2", "--seq", "32", "--qat"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert t.returncode == 0 and "final loss" in t.stdout, t.stdout[-400:] + t.stderr[-400:]
+    s = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "codeqwen1.5-7b",
+         "--smoke", "--requests", "3", "--max-batch", "2", "--max-new", "4"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert s.returncode == 0 and "served 3 requests" in s.stdout, s.stdout[-400:] + s.stderr[-400:]

@@ -1,0 +1,113 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels import ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (16, 32, 16, 16, 16, 32),
+    (48, 64, 32, 16, 16, 32),      # m padded to block
+    (128, 256, 128, 64, 64, 64),   # multi-block all dims
+    (8, 128, 64, 8, 32, 32),       # K-grid accumulation
+])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_cascade_matmul_vs_ref(m, k, n, bm, bn, bk, xdtype):
+    key = jax.random.PRNGKey(m * 1000 + k + n)
+    w = jax.random.normal(key, (k, n)) * 0.1
+    packed, scales = quant.quantize_weight(w, group_size=bk)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (m, k)) * 0.5).astype(xdtype)
+    bias = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    out_k = ops.cascade_matmul(x, packed, scales, bias,
+                               block_m=bm, block_n=bn, block_k=bk, interpret=True)
+    out_r = ops.cascade_matmul_ref(x, packed, scales, bias)
+    # the kernel feeds the MXU in bf16 BY DESIGN (TPU path); XLA-CPU's bf16
+    # dot is nondeterministically exact-or-rounded, so tolerances are bf16-scale
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=3e-2, rtol=3e-2)
+
+
+def test_cascade_matmul_batched_leading_dims():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 32)) * 0.1
+    packed, scales = quant.quantize_weight(w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 64))
+    out = ops.cascade_matmul(x, packed, scales, block_m=8, block_n=32, block_k=64, interpret=True)
+    ref = ops.cascade_matmul_ref(x.reshape(-1, 64), packed, scales).reshape(2, 5, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-2, rtol=3e-2)
+
+
+def test_cascade_matmul_groupwise_scales():
+    k, n = 128, 32
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n)) * 0.1
+    packed, scales = quant.quantize_weight(w, group_size=32)
+    assert scales.shape == (4, n)
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, k)) * 0.5
+    out = ops.cascade_matmul(x, packed, scales, block_m=16, block_n=32, block_k=32, interpret=True)
+    ref = ops.cascade_matmul_ref(x, packed, scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,bq,bk", [
+    (1, 2, 2, 128, 32, 64, 64),
+    (2, 4, 2, 256, 64, 64, 128),   # GQA group=2
+    (1, 8, 1, 128, 64, 128, 32),   # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(b, hq, hkv, s, d, bq, bk, causal):
+    keys = jax.random.split(jax.random.PRNGKey(b * 7 + s), 3)
+    q = jax.random.normal(keys[0], (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(keys[1], (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(keys[2], (b, hkv, s, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=True)
+    ref = ops.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(keys[0], (1, 4, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(keys[1], (1, 4, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(keys[2], (1, 4, 128, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    ref = ops.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(ref, dtype=np.float32), atol=3e-2, rtol=3e-2)
+
+
+def test_ssd_scan_ref_matches_chunked_model_impl():
+    """The sequential SSD oracle must match the chunked dual form used by the
+    Mamba-2 model (arXiv:2405.21060 establishes their equivalence)."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, g, n = 2, 64, 4, 8, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(keys[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    B = jax.random.normal(keys[3], (b, s, g, n)) * 0.3
+    C = jax.random.normal(keys[4], (b, s, g, n)) * 0.3
+    D = jnp.ones((h,))
+    y_chunk, _ = ssd_chunked(x, dt, A, B, C, D, chunk=16)
+    y_ref = jax.vmap(lambda xx, dd, bb, cc: ops.ssd_scan_ref(xx, dd, A, bb, cc, D))(x, dt, B, C)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref), atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("bh,s,p,n,chunk", [(2, 64, 8, 4, 16), (4, 128, 16, 8, 32),
+                                            (1, 32, 32, 16, 32)])
+def test_ssd_scan_kernel_vs_ref(bh, s, p, n, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(bh * 31 + s), 5)
+    x = jax.random.normal(keys[0], (bh, s, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (bh, s)))
+    A = -jnp.exp(jax.random.normal(keys[2], (bh,)) * 0.3)
+    B = jax.random.normal(keys[3], (bh, s, n)) * 0.3
+    C = jax.random.normal(keys[4], (bh, s, n)) * 0.3
+    D = jnp.ones((bh,))
+    out = ops.ssd_scan(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    refout = jax.vmap(lambda xx, dd, aa, bb, cc, ddk: ops.ssd_scan_ref(
+        xx[:, None, :], dd[:, None], aa[None], bb[:, None, :], cc[:, None, :],
+        ddk[None])[:, 0, :])(x, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refout), atol=2e-4, rtol=2e-4)
