@@ -44,6 +44,20 @@ def main():
               f"| {o.get('dominant','—')} | {t.get('compute','—')} | {t.get('memory','—')} "
               f"| {t.get('collective','—')} | {peak:.1f} | {o.get('useful_flops_ratio','—')} |")
 
+    # serving: batched vs slot-wise continuous-batching decode
+    if os.path.exists("results/serving.json"):
+        rows = json.load(open("results/serving.json"))
+        print("\n## Serving decode throughput (benchmarks/serving.py)\n")
+        print("| batch | slotwise tok/s | batched tok/s | speedup | batched p99 step ms |")
+        print("|" + "---|" * 5)
+        by_batch = {}
+        for r in rows:
+            by_batch.setdefault(r["max_batch"], {})[r["mode"]] = r
+        for b in sorted(by_batch):
+            s, k = by_batch[b].get("slotwise", {}), by_batch[b].get("batched", {})
+            print(f"| {b} | {s.get('tokens_per_s','—')} | {k.get('tokens_per_s','—')} "
+                  f"| {k.get('speedup_vs_slotwise','—')}x | {k.get('step_ms_p99','—')} |")
+
     # CASCADE invariant check: forward graphs with zero all-reduce bytes
     print("\n## CASCADE zero-partial-sum invariant (faithful preset)\n")
     viol = []

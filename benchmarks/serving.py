@@ -1,0 +1,112 @@
+"""Serving-path benchmark: batched vs slot-wise continuous-batching decode.
+
+Measures steady-state decode throughput of ``ServeEngine`` across batch
+sizes, in both engine modes:
+
+* ``slotwise`` — the legacy per-slot Python loop: one jitted ``decode_step``
+  dispatch per resident request per token (weight streaming paid ``batch``
+  times per engine step);
+* ``batched``  — the stacked-cache grid: ONE donated, jitted ``decode_step``
+  over all slots per engine step (weight streaming paid once — the paper's
+  Table 9/10 batching balance).
+
+Emits one JSON row per (mode, batch) into ``results/serving.json`` in the
+same row style the roofline sweeps use (``arch``/``shape``/``status`` keys),
+so ``benchmarks/report.py`` renders it alongside the other tables.
+
+Run: PYTHONPATH=src:. python -m benchmarks.serving [--out results/serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ARCH = "codeqwen1.5-7b"
+#: large enough that weight streaming (not dispatch overhead alone)
+#: dominates a decode step, small enough for CPU CI
+DIMS = dict(d_model=256, n_layers=4, d_ff=1024, vocab=2048,
+            n_heads=8, n_kv_heads=8)
+PROMPT_LEN = 16
+MEASURE_STEPS = 24
+WARMUP_STEPS = 3
+
+
+def build_engine(batched: bool, max_batch: int):
+    from repro.core.cascade import CascadeConfig
+    from repro.models import registry
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = dataclasses.replace(registry.get_config(ARCH, smoke=True), **DIMS)
+    model = registry.build_model(cfg)
+    ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0), ccfg)
+    scfg = ServeConfig(max_batch=max_batch, max_len=128, batched=batched,
+                       prefill_chunk=PROMPT_LEN)
+    return cfg, ServeEngine(model, params, ccfg, scfg)
+
+
+def bench_mode(batched: bool, max_batch: int) -> dict:
+    from repro.serve.engine import Request
+
+    cfg, eng = build_engine(batched, max_batch)
+    rng = np.random.default_rng(0)
+    for i in range(max_batch):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
+                           max_new_tokens=10_000))  # never retire during run
+    for _ in range(1 + WARMUP_STEPS):       # admit-all step + jit warmup
+        eng.step()
+    assert all(s is not None for s in eng.slots)
+    eng.step_times.clear()                  # drop trace/compile steps from p50/p99
+    t0 = time.perf_counter()
+    produced = 0
+    for _ in range(MEASURE_STEPS):
+        produced += eng.step()
+    dt = time.perf_counter() - t0
+    m = eng.metrics()
+    return {
+        "arch": ARCH,
+        "shape": f"serve_decode_b{max_batch}",
+        "mode": "batched" if batched else "slotwise",
+        "status": "ok",
+        "max_batch": max_batch,
+        "decode_tokens": produced,
+        "wall_s": round(dt, 4),
+        "tokens_per_s": round(produced / dt, 2),
+        "step_ms_p50": round(m["step_time_p50_s"] * 1e3, 2),
+        "step_ms_p99": round(m["step_time_p99_s"] * 1e3, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/serving.json")
+    ap.add_argument("--batches", type=int, nargs="*", default=[1, 2, 4, 8])
+    args = ap.parse_args()
+
+    rows = []
+    for b in args.batches:
+        slot = bench_mode(batched=False, max_batch=b)
+        bat = bench_mode(batched=True, max_batch=b)
+        speedup = bat["tokens_per_s"] / max(slot["tokens_per_s"], 1e-9)
+        bat["speedup_vs_slotwise"] = slot["speedup_vs_slotwise"] = round(speedup, 2)
+        rows += [slot, bat]
+        print(f"b={b:2d}  slotwise {slot['tokens_per_s']:9.1f} tok/s   "
+              f"batched {bat['tokens_per_s']:9.1f} tok/s   "
+              f"speedup {speedup:5.2f}x")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

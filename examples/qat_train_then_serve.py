@@ -96,7 +96,7 @@ def main():
     for r in reqs:
         eng.submit(r)
     t0, tokens = time.time(), 0
-    while eng.queue or any(s is not None for s in eng.slots):
+    while eng.busy():
         tokens += eng.step()
     print(f"served {len(reqs)} requests / {tokens} tokens in {time.time()-t0:.1f}s "
           f"from FP4 weights; sample: {reqs[0].tokens_out}")

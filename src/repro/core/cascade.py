@@ -39,8 +39,14 @@ class CascadeConfig:
     use_kernel: bool = False       # Pallas kernel (TPU) vs XLA dequant-matmul
     precision_sim: bool = False    # bit-accurate FP8-accum path (tests only)
     compute_dtype: Any = jnp.bfloat16
-    kv_dtype: Any = jnp.bfloat16   # KV/state cache dtype (fp8 = half the
-                                   # decode memory term; industry-standard)
+    kv_dtype: Any = None           # KV/state cache dtype; None = follow
+                                   # compute_dtype (fp8 = half the decode
+                                   # memory term; industry-standard)
+
+    @property
+    def resolved_kv_dtype(self):
+        """Storage dtype for KV/state caches (stacked slot grids included)."""
+        return self.kv_dtype if self.kv_dtype is not None else self.compute_dtype
 
 
 # ---------------------------------------------------------------------------

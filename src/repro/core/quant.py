@@ -38,14 +38,38 @@ FP4_MAX = 6.0
 #: (matches RNE used by ml_dtypes' float4_e2m1fn cast).
 _FP4_MIDPOINTS = (FP4_VALUES[1:] + FP4_VALUES[:-1]) / 2.0  # 7 midpoints
 
+#: jax only exposes the float4_e2m1fn dtype from 0.4.39; older runtimes use
+#: the pure-jnp grid rounding below (bit-identical, verified in tests).
+HAS_NATIVE_FP4 = hasattr(jnp, "float4_e2m1fn")
+
+
+def fp4_round(x: jax.Array) -> jax.Array:
+    """Round f32 values onto the FP4 E2M1 value grid (RNE, saturating).
+
+    Equivalent to ``x.astype(float4_e2m1fn).astype(float32)`` — used as the
+    fallback when the runtime lacks the native dtype. All midpoints are
+    exactly representable in f32, so the tie test is exact.
+    """
+    if HAS_NATIVE_FP4:
+        return x.astype(jnp.float4_e2m1fn).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    mag = jnp.abs(xf)
+    mid = jnp.asarray(_FP4_MIDPOINTS)
+    lo = jnp.searchsorted(mid, mag, side="left")   # ties -> lower value index
+    hi = jnp.searchsorted(mid, mag, side="right")  # ties -> upper value index
+    idx = jnp.where(lo % 2 == 0, lo, hi)           # tie: pick even mantissa code
+    mag4 = jnp.asarray(FP4_VALUES)[jnp.minimum(idx, 7)]
+    out = jnp.where(jnp.signbit(xf), -mag4, mag4)
+    return jnp.where(jnp.isnan(xf), xf, out)       # propagate NaN like the native cast
+
 
 def fp4_encode(x: jax.Array) -> jax.Array:
     """Encode float -> FP4 E2M1 code (uint8 in 0..15), round-to-nearest-even.
 
-    Uses the native ``float4_e2m1fn`` cast for the value rounding and then
-    maps the value back to its code via the magnitude table.
+    Rounds onto the FP4 value grid and maps the value back to its code via
+    the magnitude table.
     """
-    v = x.astype(jnp.float4_e2m1fn).astype(jnp.float32)
+    v = fp4_round(x)
     sign = (v < 0) | ((v == 0) & (jnp.signbit(x.astype(jnp.float32))))
     mag = jnp.abs(v)
     # searchsorted over the 8 exact magnitudes
@@ -227,7 +251,7 @@ def fake_quant_fp4(w: jax.Array, group_size: int = 0) -> jax.Array:
         absmax = jnp.max(jnp.abs(wg), axis=1)
         scales = jnp.where(absmax > 0, absmax / FP4_MAX, 1.0)
         q = wg / scales[:, None, :]
-        v = q.astype(jnp.float4_e2m1fn).astype(jnp.float32)
+        v = fp4_round(q)
         return (v * scales[:, None, :]).reshape(w2.shape)
 
     out = w2 + lax.stop_gradient(qdq(w2) - w2.astype(jnp.float32)).astype(w2.dtype)

@@ -158,7 +158,7 @@ def build_step(arch_id: str, shape_name: str, ccfg: CascadeConfig,
     # decode: one new token against a cache of seq_len
     cache_shape = jax.eval_shape(
         lambda: model.init_cache(shape.global_batch, shape.seq_len,
-                                 dtype=ccfg.kv_dtype))
+                                 dtype=ccfg.resolved_kv_dtype))
 
     def step_fn(params, batch, cache):
         return model.decode_step(params, batch, cache, ccfg)
@@ -207,6 +207,8 @@ def lower_cell(arch_id: str, shape_name: str, mesh, ccfg=None,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     coll = collective_stats(compiled.as_text())
     record = {
         "arch": arch_id,

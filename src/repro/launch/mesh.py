@@ -12,16 +12,24 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where the runtime has
+    them (jax >= 0.5 exposes jax.sharding.AxisType; older releases only
+    build Auto meshes, so the kwarg is simply dropped)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = ({"axis_types": (axis_type.Auto,) * len(axes)}
+              if axis_type is not None else {})
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Degenerate mesh over however many devices exist (CPU tests)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_parallel, model_parallel), ("data", "model"))

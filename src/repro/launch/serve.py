@@ -53,11 +53,13 @@ def main():
 
     t0 = time.time()
     total = 0
-    while eng.queue or any(s is not None for s in eng.slots):
+    while eng.busy():
         total += eng.step()
     dt = time.time() - t0
+    m = eng.metrics()
     print(f"served {args.requests} requests, {total} tokens in {dt:.2f}s "
-          f"({total / max(dt, 1e-9):.1f} tok/s), p99 step {eng.straggler_p99()*1e3:.1f} ms")
+          f"({total / max(dt, 1e-9):.1f} tok/s), p99 step {eng.straggler_p99()*1e3:.1f} ms, "
+          f"batched={m['batched']}, admission wait {m['admission_wait_s_mean']*1e3:.1f} ms")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.tokens_out}")
 

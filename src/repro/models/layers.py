@@ -85,6 +85,43 @@ def apply_mrope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# per-slot cache primitives (continuous batching)
+# ---------------------------------------------------------------------------
+
+def pos_rows(pos: jax.Array, b: int) -> jax.Array:
+    """Normalize a cache position to per-row shape (B,) int32.
+
+    Caches written by this module carry one position per batch row so a
+    stacked slot grid can hold streams of different lengths (continuous
+    batching); a legacy scalar position is broadcast.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    return pos
+
+
+def pos_slots(slot_pos: jax.Array, b: int, t: int) -> jax.Array:
+    """Normalize a ring-buffer slot-position table to per-row shape (B, T)."""
+    slot_pos = jnp.asarray(slot_pos, jnp.int32)
+    if slot_pos.ndim == 1:
+        slot_pos = jnp.broadcast_to(slot_pos, (b, t))
+    return slot_pos
+
+
+def update_rows(buf: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """Write ``new[i]`` into ``buf[i]`` at row-specific index ``idx[i]``.
+
+    buf: (B, T, ...); new: (B, s, ...); idx: (B,) per-row start along axis 1.
+    """
+    def one(bu, ne, i):
+        start = (i,) + (0,) * (bu.ndim - 1)
+        return jax.lax.dynamic_update_slice(bu, ne.astype(bu.dtype), start)
+
+    return jax.vmap(one)(buf, new, idx)
+
+
+# ---------------------------------------------------------------------------
 # attention (GQA / MHA / local-window), full-seq and cached-decode paths
 # ---------------------------------------------------------------------------
 
@@ -177,6 +214,13 @@ def attn_apply(
                     buffer length equals the dry-run shape's seq_len for
                     full attention, or the window for local attention
                     (ring buffer, slot(p) = p %% window).
+    * ``extend``  — append s tokens at each row's position (chunked prefill
+                    into an existing cache; full attention only). Rows may
+                    sit at different positions: this is the continuous-
+                    batching admission path.
+
+    Cache positions are per-row (B,) so a stacked slot grid can hold streams
+    of different lengths; legacy scalar positions are broadcast.
     """
     b, s, _ = x.shape
     h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -185,8 +229,10 @@ def attn_apply(
     v = cascade.linear_apply(params["wv"], x, ccfg).reshape(b, s, hk, hd)
 
     if positions is None:
-        pos0 = cache["pos"] if cache is not None else 0
-        positions = pos0 + jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+        if cache is not None:
+            positions = pos_rows(cache["pos"], b)[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        else:
+            positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
 
     inv = rope_freqs(hd, cfg.rope_theta, cfg.rope_fraction)
     if cfg.mrope_sections:
@@ -198,25 +244,33 @@ def attn_apply(
 
     scale = cfg.softmax_scale or 1.0 / (hd ** 0.5)
 
-    if mode == "decode":
-        assert cache is not None and s == 1
-        pos = cache["pos"]
+    if mode in ("decode", "extend"):
+        assert cache is not None
+        assert mode == "extend" or s == 1
+        pos = pos_rows(cache["pos"], b)                 # (B,) next write index
         t = cache["k"].shape[1]
-        if cfg.window > 0:  # ring buffer
+        if cfg.window > 0:  # ring buffer (decode only: chunks don't wrap)
+            assert mode == "decode", "extend mode requires full attention"
             idx = pos % t
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
-            slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None].astype(jnp.int32), (idx,))
-            valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < cfg.window)
+            ck = update_rows(cache["k"], k, idx)
+            cv = update_rows(cache["v"], v, idx)
+            slot_pos = pos_slots(cache["slot_pos"], b, t)
+            slot_pos = jax.vmap(
+                lambda sp, p, i: jax.lax.dynamic_update_slice(sp, p[None], (i,)))(
+                    slot_pos, pos, idx)                 # (B, T)
+            valid = ((slot_pos >= 0) & (slot_pos <= pos[:, None])
+                     & (pos[:, None] - slot_pos < cfg.window))[:, None, :]  # (B, 1, T)
             new_cache = {"k": ck, "v": cv, "pos": pos + 1, "slot_pos": slot_pos}
         else:
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-            valid = jnp.arange(t) <= pos
-            new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+            ck = update_rows(cache["k"], k, pos)
+            cv = update_rows(cache["v"], v, pos)
+            rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]   # (B, s)
+            valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]        # (B, s, T)
+            new_cache = {"k": ck, "v": cv, "pos": pos + s}
         qd = q.astype(jnp.float32).reshape(b, s, hk, h // hk, hd)
         logits = jnp.einsum("bshgd,bthd->bhgst", qd, ck.astype(jnp.float32)) * scale
-        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        # valid: (B, s, T) (or (B, 1, T) ring) -> (B, 1, 1, s, T) vs (b,hk,g,s,t)
+        logits = jnp.where(valid[:, None, None], logits, -1e30)
         p = jax.nn.softmax(logits, axis=-1)
         o = jnp.einsum("bhgst,bthd->bshgd", p, cv.astype(jnp.float32)).reshape(b, s, h, hd)
     else:
@@ -230,16 +284,25 @@ def attn_apply(
             o = _sdpa(q, k, v, m, scale)
         new_cache = None
         if mode == "prefill":
-            new_cache = _build_cache_from_prefill(k, v, cfg, s, max_len=max_len)
+            new_cache = _build_cache_from_prefill(k, v, cfg, s, max_len=max_len,
+                                                  dtype=ccfg.resolved_kv_dtype)
 
     out = cascade.linear_apply(params["wo"], o.astype(x.dtype).reshape(b, s, h * hd), ccfg)
     return out, new_cache
 
 
 def _build_cache_from_prefill(k: jax.Array, v: jax.Array, cfg: AttnConfig, s: int,
-                              max_len: int | None = None) -> dict:
-    """Construct a decode-ready cache from prefill K/V (positions 0..s-1)."""
+                              max_len: int | None = None,
+                              dtype=None) -> dict:
+    """Construct a decode-ready cache from prefill K/V (positions 0..s-1).
+
+    Positions are per-row (all rows start at s); ``dtype`` overrides the KV
+    storage dtype (CascadeConfig.kv_dtype plumbing — fp8 halves decode HBM).
+    """
     b, _, hk, hd = k.shape
+    if dtype is not None:
+        k, v = k.astype(dtype), v.astype(dtype)
+    pos = jnp.full((b,), s, jnp.int32)
     if cfg.window > 0:
         t = cfg.window
         if s >= t:
@@ -254,12 +317,12 @@ def _build_cache_from_prefill(k: jax.Array, v: jax.Array, cfg: AttnConfig, s: in
         return {
             "k": jnp.roll(k_last, shift, axis=1),
             "v": jnp.roll(v_last, shift, axis=1),
-            "slot_pos": jnp.roll(pos_last, shift),
-            "pos": jnp.int32(s),
+            "slot_pos": jnp.broadcast_to(jnp.roll(pos_last, shift), (b, t)),
+            "pos": pos,
         }
     t = max_len if max_len is not None else s
     pad = [(0, 0), (0, t - s), (0, 0), (0, 0)]
-    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad), "pos": jnp.int32(s)}
+    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad), "pos": pos}
 
 
 def attn_cache_init(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
@@ -269,13 +332,13 @@ def attn_cache_init(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat1
         return {
             "k": jnp.zeros((batch, t, hk, hd), dtype),
             "v": jnp.zeros((batch, t, hk, hd), dtype),
-            "slot_pos": jnp.full((t,), -1, jnp.int32),
-            "pos": jnp.int32(0),
+            "slot_pos": jnp.full((batch, t), -1, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, max_len, hk, hd), dtype),
         "v": jnp.zeros((batch, max_len, hk, hd), dtype),
-        "pos": jnp.int32(0),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 

@@ -140,8 +140,11 @@ def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len
     b, s, _ = x.shape
     h = cfg.n_heads
     scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
-    pos0 = cache["pos"] if cache is not None else 0
-    positions = pos0 + jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    if cache is not None:
+        positions = (L.pos_rows(cache["pos"], b)[:, None]
+                     + jnp.arange(s, dtype=jnp.int32)[None, :])
+    else:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
     q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, x, cfg, ccfg, positions)
 
     wkv_b = cascade.linear_weight(params["wkv_b"], ccfg)              # (kv_lora, H*(nope+v))
@@ -151,16 +154,16 @@ def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len
 
     if mode == "decode":
         assert s == 1
-        pos = cache["pos"]
-        ckv = lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
-        krp = lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0))
+        pos = L.pos_rows(cache["pos"], b)                     # (B,) per-slot
+        ckv = L.update_rows(cache["c_kv"], c_kv, pos)
+        krp = L.update_rows(cache["k_rope"], k_rope, pos)
         t = ckv.shape[1]
         # weight absorption: stay in latent space
         q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
         scores = (jnp.einsum("bshl,btl->bhst", q_lat, ckv.astype(jnp.float32))
                   + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), krp.astype(jnp.float32))) * scale
-        valid = jnp.arange(t) <= pos
-        scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        valid = jnp.arange(t)[None, :] <= pos[:, None]        # (B, T)
+        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
         p = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhst,btl->bshl", p, ckv.astype(jnp.float32))
         o = jnp.einsum("bshl,lhd->bshd", ctx, w_v.astype(jnp.float32))  # (b,s,H,v)
@@ -185,9 +188,10 @@ def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len
         if mode == "prefill":
             t = max_len if max_len is not None else s
             pad = [(0, 0), (0, t - s), (0, 0)]
-            new_cache = {"c_kv": jnp.pad(c_kv.astype(ccfg.compute_dtype), pad),
-                         "k_rope": jnp.pad(k_rope.astype(ccfg.compute_dtype), pad),
-                         "pos": jnp.int32(s)}
+            kvd = ccfg.resolved_kv_dtype
+            new_cache = {"c_kv": jnp.pad(c_kv.astype(kvd), pad),
+                         "k_rope": jnp.pad(k_rope.astype(kvd), pad),
+                         "pos": jnp.full((b,), s, jnp.int32)}
 
     out = cascade.linear_apply(params["wo"], o.astype(x.dtype).reshape(b, s, h * cfg.v_head_dim), ccfg)
     return out, new_cache
@@ -197,7 +201,7 @@ def mla_cache_init(batch: int, max_len: int, cfg: ArchConfig, dtype=jnp.bfloat16
     return {
         "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
         "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
-        "pos": jnp.int32(0),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 

@@ -166,3 +166,55 @@ class TransformerLM:
         x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
         logits = self._head(params, x, ccfg)
         return logits, {"layers": new_caches}
+
+    # ----------------------------------------- continuous batching cache API
+    # Stacked caches: every leaf is (L, B, ...) — the slot axis is axis 1.
+    # The serving engine keeps ONE fixed-shape cache for the whole slot grid
+    # and admits/retires requests as slot writes, so batched decode never
+    # recompiles as traffic comes and goes.
+
+    cache_slot_axis: int = 1
+
+    def stack_caches(self, caches: list) -> dict:
+        """Concatenate per-request caches along the slot axis."""
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *caches)
+
+    def cache_at(self, cache: dict, i) -> dict:
+        """Batch-1 view of slot ``i`` (failover handoff / inspection)."""
+        return jax.tree.map(
+            lambda x: lax.dynamic_slice_in_dim(x, i, 1, axis=1), cache)
+
+    def write_cache(self, cache: dict, sub: dict, i) -> dict:
+        """Write a batch-1 cache ``sub`` into slot ``i`` of a stacked cache."""
+        return jax.tree.map(
+            lambda c, s: lax.dynamic_update_slice_in_dim(c, s.astype(c.dtype), i, axis=1),
+            cache, sub)
+
+    def prefill_extend(self, params: dict, batch: dict, cache: dict,
+                       ccfg: CascadeConfig, n_valid=None):
+        """Append a (possibly right-padded) token chunk to an existing cache.
+
+        Chunked-prefill admission path: the chunk shape stays fixed so long
+        prompts compile ONE extend kernel regardless of length; only the
+        first ``n_valid`` tokens of the chunk are real. Pad K/V lands above
+        each row's position where it is mask-invalid and overwritten by the
+        next write. Returns logits for the last valid token, (B, 1, V).
+        """
+        x = self._embed(params, batch, ccfg)
+        b, s, _ = x.shape
+
+        def body(x, scanned):
+            lp, c = scanned
+            y, nc = self._block(lp, x, ccfg, None, c, "extend")
+            return y, nc
+
+        x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
+        if n_valid is None:
+            last = jnp.full((b,), s - 1, jnp.int32)
+        else:
+            nv = jnp.asarray(n_valid, jnp.int32)
+            last = jnp.broadcast_to(nv, (b,)) - 1
+            new_caches = {**new_caches, "pos": new_caches["pos"] - (s - nv)}
+        x_last = jax.vmap(lambda xi, j: lax.dynamic_slice_in_dim(xi, j, 1, axis=0))(x, last)
+        logits = self._head(params, x_last, ccfg)
+        return logits, {"layers": new_caches}

@@ -44,9 +44,8 @@ class ReplicaSet:
     def submit(self, req: Request):
         alive = [i for i, h in enumerate(self.health) if h.alive]
         assert alive, "no healthy replicas"
-        # least-loaded among healthy
-        i = min(alive, key=lambda j: len(self.engines[j].queue)
-                + sum(r is not None for r in self.engines[j].slots))
+        # least-loaded among healthy (queued + resident + mid-prefill)
+        i = min(alive, key=lambda j: self.engines[j].load())
         self.engines[i].submit(req)
 
     def step(self) -> int:
@@ -65,21 +64,33 @@ class ReplicaSet:
 
     # ------------------------------------------------------------- failure
     def kill_replica(self, i: int):
-        """Simulate a hard replica loss; re-queue its in-flight work."""
+        """Simulate a hard replica loss; re-queue its in-flight work.
+
+        Works for both engine modes: ``abort_in_flight`` frees the slot grid
+        (batched mode: the stacked-cache slots simply become garbage — decode
+        state is reconstructible from the prompt + emitted tokens)."""
         self.health[i].alive = False
         eng = self.engines[i]
-        for j, req in enumerate(eng.slots):
-            if req is not None:
-                # decode state is reconstructible: re-submit prompt + emitted
-                re = Request(uid=req.uid,
-                             prompt=np.concatenate([req.prompt, np.asarray(req.tokens_out[:-1], np.int32)])
-                             if len(req.tokens_out) > 1 else req.prompt,
-                             max_new_tokens=req.max_new_tokens - len(req.tokens_out) + 1)
-                re.tokens_out = list(req.tokens_out)
-                self.requeued.append(re)
-                self.submit(re)
-                eng.slots[j] = None
-                eng.caches[j] = None
+        for req in eng.abort_in_flight():
+            new = req.tokens_out[req.prompt_carried:]   # emitted since last rebuild
+            if not new:                 # mid-prefill: nothing new to bake in
+                self.submit(req)
+                continue
+            # decode state is reconstructible: the clone's prompt is the
+            # current prompt + all-but-the-last NEW token; admission prefill
+            # regenerates that last token (greedy decode is deterministic),
+            # and retirement still fires at the ORIGINAL max_new_tokens
+            # since tokens_out carries over. ``prompt_carried`` records how
+            # many tokens_out entries the prompt now contains, so repeated
+            # failures never double-bake tokens.
+            re = Request(uid=req.uid,
+                         prompt=np.concatenate([req.prompt, np.asarray(new[:-1], np.int32)])
+                         if len(new) > 1 else req.prompt,
+                         max_new_tokens=req.max_new_tokens)
+            re.tokens_out = list(req.tokens_out[:-1])
+            re.prompt_carried = len(re.tokens_out)
+            self.requeued.append(re)
+            self.submit(re)
         # not-yet-admitted requests move to survivors unchanged
         for req in list(eng.queue):
             self.submit(req)
@@ -99,8 +110,7 @@ class ReplicaSet:
 
     def drain(self, max_steps: int = 100_000):
         for _ in range(max_steps):
-            if all((not h.alive) or
-                   (len(e.queue) == 0 and not any(s is not None for s in e.slots))
+            if all((not h.alive) or not e.busy()
                    for e, h in zip(self.engines, self.health)):
                 break
             self.step()

@@ -1,5 +1,5 @@
-"""Serving engine: continuous batching over a fixed slot grid, FP4 weights,
-prefill/decode split, CREST runtime fault detection, straggler mitigation.
+"""Serving engine: batched continuous batching over a fixed slot grid, FP4
+weights, chunked prefill, CREST runtime fault detection, straggler guard.
 
 The ZettaLith analogy (paper Sections 14, 19-20): a rack serves one model
 from resident (HBM) FP4 weights; batch size is chosen to balance HBM weight
@@ -7,10 +7,26 @@ streaming against compute (Table 9/10); CREST continuously shadow-tests
 columns; failed components are mapped out without draining traffic.
 
 Software mapping: ``ServeEngine`` owns a slot grid of ``max_batch`` decode
-streams. Each step: (1) admit queued requests into free slots via prefill,
-(2) decode one token for every active slot, (3) optionally run a CREST probe
-on the lm_head matmul, (4) retire finished streams. ``elastic.py`` handles
-replica failure by re-queueing in-flight requests.
+streams backed by ONE stacked, fixed-shape KV cache pytree. Each step:
+
+1. **admission** — queued requests are prefilled into free slots in
+   ``prefill_chunk``-token pieces (fixed chunk shape => one compiled extend
+   kernel for any prompt length), bounded by a per-step ``token_budget`` so
+   decode latency for already-resident streams stays bounded;
+2. **decode** — ONE donated, jitted batched ``decode_step`` runs over the
+   whole slot grid (weight streaming is paid once per step, not once per
+   request — the CASCADE batching analysis, Table 9/10); inactive slots
+   compute masked garbage that never escapes;
+3. a CREST probe wave optionally shadow-tests the lm_head matmul;
+4. finished streams retire by simply freeing their slot — admission and
+   retirement are cache-slot writes, so nothing ever recompiles as traffic
+   comes and goes.
+
+``batched=False`` (or a model without the stacked-cache API) falls back to
+the legacy slot-wise loop — kept as the benchmark baseline and for
+state-space/recurrent models. ``elastic.py`` handles replica failure by
+re-queueing in-flight requests (decode state is reconstructible from the
+prompt + emitted tokens).
 """
 from __future__ import annotations
 
@@ -26,6 +42,11 @@ import numpy as np
 from repro.core import crest
 from repro.core.cascade import CascadeConfig
 
+#: methods a model must expose for the batched (stacked-cache) fast path
+#: (``stack_caches``/``cache_at`` are companion utilities on the model, but
+#: the engine itself only needs slot writes + chunked extend)
+_BATCHED_API = ("write_cache", "prefill_extend")
+
 
 @dataclasses.dataclass
 class Request:
@@ -33,8 +54,13 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
     created_at: float = 0.0
+    admitted_at: float = 0.0      # when prefill started (admission wait ends)
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
     tokens_out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    prompt_carried: int = 0       # leading tokens_out entries already baked
+                                  # into ``prompt`` by a failover rebuild
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +72,19 @@ class ServeConfig:
     crest_every: int = 4          # run a BIST probe wave every N engine steps
     crest_cfg: crest.CrestConfig = dataclasses.field(default_factory=crest.CrestConfig)
     greedy: bool = True
+    batched: bool = True          # one jitted decode over the whole slot grid
+    prefill_chunk: int = 32       # chunked-prefill piece size (0 = whole prompt)
+    token_budget: int = 0         # max prompt tokens admitted per step (0 = no cap;
+                                  # enforced at chunk granularity)
+
+
+@dataclasses.dataclass
+class _Staging:
+    """A request mid-prefill: holds its batch-1 cache until fully prefilled."""
+    req: Request
+    cache: Any
+    consumed: int
+    slot: int
 
 
 class ServeEngine:
@@ -56,17 +95,49 @@ class ServeEngine:
         self.scfg = scfg
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * scfg.max_batch
-        self.caches: List[Any] = [None] * scfg.max_batch
         self.crest_state = None
         self.fault_mask = None          # set by tests/demos to inject faults
         self._probe_w = None
         self._steps = 0
+        self.step_times: list = []
+        self._decode_tokens = 0
+        self._admission_waits: list = []
+        self._retired: List[Request] = []
+        self._rejected = 0
+        self._staging: Optional[_Staging] = None
+
+        # batched mode needs the stacked-cache API AND full attention (the
+        # chunked-prefill extend path has no ring-buffer support yet) AND
+        # flat logits (multi-codebook heads only work slot-wise for now)
+        window = getattr(getattr(model, "attn_cfg", None), "window", 0)
+        codebooks = getattr(getattr(model, "cfg", None), "n_codebooks", 0)
+        self.batched = (scfg.batched and window == 0 and not codebooks
+                        and all(hasattr(model, m) for m in _BATCHED_API))
+        kv_dtype = ccfg.resolved_kv_dtype
+        if self.batched:
+            # round the cache length up to a chunk multiple so padded chunk
+            # writes never clamp into (and clobber) valid cache entries
+            c = scfg.prefill_chunk
+            self._cache_len = (-(-scfg.max_len // c) * c) if c > 0 else scfg.max_len
+            self.cache = model.init_cache(scfg.max_batch, self._cache_len, dtype=kv_dtype)
+            self.caches: List[Any] = []   # unused in batched mode
+            self._decode_fn = jax.jit(
+                lambda p, t, c_: model.decode_step(p, {"tokens": t}, c_, ccfg),
+                donate_argnums=(2,))
+            self._extend_fn = jax.jit(
+                lambda p, t, c_, n: model.prefill_extend(p, {"tokens": t}, c_, ccfg,
+                                                         n_valid=n),
+                donate_argnums=(2,))
+            self._write_fn = jax.jit(model.write_cache, donate_argnums=(0,))
+        else:
+            self._cache_len = scfg.max_len
+            self.cache = None
+            self.caches = [None] * scfg.max_batch
+            self._decode_fn = jax.jit(
+                lambda p, t, c_: model.decode_step(p, {"tokens": t}, c_, ccfg))
         if scfg.crest_enabled:
             self._probe_w = self._dense_head_weight()
             self.crest_state = crest.crest_init(self._probe_w.shape[1], scfg.crest_cfg)
-        self._decode_fn = jax.jit(
-            lambda p, t, c: model.decode_step(p, {"tokens": t}, c, ccfg))
-        self.step_times: list = []
 
     def _dense_head_weight(self):
         """Dense view of the lm_head weight used for CREST BIST probes
@@ -82,47 +153,182 @@ class ServeEngine:
         req.created_at = time.monotonic()
         self.queue.append(req)
 
-    def _admit(self):
+    def _pop_admittable(self) -> Optional[Request]:
+        """Next queued request; un-servable prompts — empty, or too long for
+        the slot grid to hold with room for even one generated token — are
+        rejected, not crashed on / silently clobbered."""
+        while self.queue:
+            req = self.queue.popleft()
+            if 0 < len(req.prompt) < self.scfg.max_len:
+                return req
+            req.done = True
+            req.finished_at = time.monotonic()
+            self._rejected += 1
+            self._retired.append(req)
+        return None
+
+    def _free_slot(self) -> Optional[int]:
+        staged = self._staging.slot if self._staging is not None else -1
+        for i in range(self.scfg.max_batch):
+            if self.slots[i] is None and i != staged:
+                return i
+        return None
+
+    def _admit_batched(self):
+        """Spend up to ``token_budget`` prompt tokens on (chunked) prefill."""
+        budget = self.scfg.token_budget or 1 << 30
+        spent = 0
+        while spent < budget:
+            if self._staging is None:
+                slot = self._free_slot()
+                if slot is None:
+                    return
+                req = self._pop_admittable()
+                if req is None:
+                    return
+                req.admitted_at = time.monotonic()
+                self._admission_waits.append(req.admitted_at - req.created_at)
+                sub = self.model.init_cache(1, self._cache_len,
+                                            dtype=self.ccfg.resolved_kv_dtype)
+                self._staging = _Staging(req, sub, 0, slot)
+            st = self._staging
+            prompt = st.req.prompt
+            chunk = self.scfg.prefill_chunk or len(prompt)
+            logits = None
+            while st.consumed < len(prompt) and spent < budget:
+                n = min(chunk, len(prompt) - st.consumed)
+                toks = np.zeros((1, chunk), np.int32)
+                toks[0, :n] = prompt[st.consumed:st.consumed + n]
+                logits, st.cache = self._extend_fn(
+                    self.params, jnp.asarray(toks), st.cache, jnp.int32(n))
+                st.consumed += n
+                spent += n
+            if st.consumed < len(prompt):
+                return                      # budget exhausted mid-prompt
+            nxt = int(jnp.argmax(logits[0, -1]))
+            st.req.tokens_out.append(nxt)
+            st.req.first_token_at = time.monotonic()
+            self.cache = self._write_fn(self.cache, st.cache, jnp.int32(st.slot))
+            self.slots[st.slot] = st.req
+            self._staging = None
+            # the prefill-generated token may already end the stream
+            self._retire_if_done(st.req, st.slot, nxt)
+
+    def _admit_slotwise(self):
         for i in range(self.scfg.max_batch):
             if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
+                req = self._pop_admittable()
+                if req is None:
+                    return
+                req.admitted_at = time.monotonic()
+                self._admission_waits.append(req.admitted_at - req.created_at)
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 logits, cache = self.model.prefill(
                     self.params, {"tokens": toks}, self.ccfg, max_len=self.scfg.max_len)
                 nxt = int(jnp.argmax(logits[0, -1]))
                 req.tokens_out.append(nxt)
+                req.first_token_at = time.monotonic()
                 self.slots[i] = req
                 self.caches[i] = cache
+                # the prefill-generated token may already end the stream
+                self._retire_if_done(req, i, nxt)
+
+    def _admit(self):
+        if self.batched:
+            self._admit_batched()
+        else:
+            self._admit_slotwise()
 
     # --------------------------------------------------------------- decode
     def _active(self):
         return [i for i, r in enumerate(self.slots) if r is not None]
 
-    def step(self) -> int:
-        """One engine step; returns number of tokens produced."""
-        self._admit()
-        active = self._active()
-        if not active:
-            return 0
-        t0 = time.monotonic()
+    def _retire_if_done(self, req: Request, i: int, nxt: int):
+        # cache usage: prompt + tokens emitted since (carried ones are
+        # already inside the prompt — failover clones)
+        used = len(req.prompt) + len(req.tokens_out) - req.prompt_carried
+        if (len(req.tokens_out) >= req.max_new_tokens
+                or nxt == self.scfg.eos_id
+                # context limit: the next write would fall outside the cache
+                or used >= self.scfg.max_len):
+            req.done = True
+            req.finished_at = time.monotonic()
+            self._retired.append(req)
+            self.slots[i] = None
+            if not self.batched:
+                self.caches[i] = None
+
+    def _decode_batched(self, active: List[int]) -> int:
+        toks = np.zeros((self.scfg.max_batch, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].tokens_out[-1]
+        logits, self.cache = self._decode_fn(self.params, jnp.asarray(toks), self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         produced = 0
-        self._steps += 1
-        if self.scfg.crest_enabled and self._steps % self.scfg.crest_every == 0:
-            self._crest_probe()
-        for i in active:  # slot-wise decode (per-slot caches keep failover simple)
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.tokens_out.append(tok)
+            produced += 1
+            self._retire_if_done(req, i, tok)
+        return produced
+
+    def _decode_slotwise(self, active: List[int]) -> int:
+        produced = 0
+        for i in active:
             req = self.slots[i]
             tok = jnp.asarray([[req.tokens_out[-1]]], jnp.int32)
             logits, self.caches[i] = self._decode_fn(self.params, tok, self.caches[i])
             nxt = int(jnp.argmax(logits[0, -1] if logits.ndim == 3 else logits[0, -1, 0]))
             req.tokens_out.append(nxt)
             produced += 1
-            if len(req.tokens_out) >= req.max_new_tokens or nxt == self.scfg.eos_id:
-                req.done = True
-                self.slots[i] = None
-                self.caches[i] = None
-        self.step_times.append(time.monotonic() - t0)
+            self._retire_if_done(req, i, nxt)
         return produced
 
+    def step(self) -> int:
+        """One engine step; returns number of decode tokens produced."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return 0
+        t0 = time.monotonic()
+        self._steps += 1
+        if self.scfg.crest_enabled and self._steps % self.scfg.crest_every == 0:
+            self._crest_probe()
+        produced = (self._decode_batched(active) if self.batched
+                    else self._decode_slotwise(active))
+        self.step_times.append(time.monotonic() - t0)
+        self._decode_tokens += produced
+        return produced
+
+    # ------------------------------------------------------------- failover
+    def evict(self, i: int) -> Optional[Request]:
+        """Free slot i and return its request. The stacked cache slot simply
+        becomes garbage — decode state is reconstructible from the prompt +
+        emitted tokens (idempotent regenerate), so nothing else to save."""
+        req = self.slots[i]
+        self.slots[i] = None
+        if not self.batched:
+            self.caches[i] = None
+        return req
+
+    def abort_in_flight(self) -> List[Request]:
+        """Evict every resident/staging request (replica death path)."""
+        out = [r for r in (self.evict(i) for i in self._active()) if r is not None]
+        if self._staging is not None:
+            out.append(self._staging.req)
+            self._staging = None
+        return out
+
+    def busy(self) -> bool:
+        return bool(self.queue) or self._staging is not None or bool(self._active())
+
+    def load(self) -> int:
+        """Queued + resident + mid-prefill work (dispatch balancing input)."""
+        return (len(self.queue) + sum(r is not None for r in self.slots)
+                + (self._staging is not None))
+
+    # ---------------------------------------------------------------- crest
     def _crest_probe(self):
         """BIST probe wave (paper Section 20.6): run the CREST-protected
         matmul on the lm_head weight with pseudo-random test activations;
@@ -142,19 +348,31 @@ class ServeEngine:
         return {"confirmed_faults": int(self.crest_state.confirmed_faults.sum()),
                 "repaired": int(self.crest_state.n_repaired)}
 
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        """Throughput/latency counters for the dashboard & benchmarks."""
+        st = np.asarray(self.step_times, np.float64)
+        total = float(st.sum()) if st.size else 0.0
+        return {
+            "batched": self.batched,
+            "steps": int(st.size),
+            "decode_tokens": self._decode_tokens,
+            "tokens_per_s": (self._decode_tokens / total) if total > 0 else 0.0,
+            "admission_wait_s_mean": (float(np.mean(self._admission_waits))
+                                      if self._admission_waits else 0.0),
+            "step_time_p50_s": float(np.percentile(st, 50)) if st.size else 0.0,
+            "step_time_p99_s": float(np.percentile(st, 99)) if st.size else 0.0,
+            "requests_finished": len(self._retired) - self._rejected,
+            "requests_rejected": self._rejected,
+        }
+
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        seen = set()
+        n0 = len(self._retired)
         for _ in range(max_steps):
-            active_before = [r for r in self.slots if r is not None]
             self.step()
-            for r in active_before:
-                if r.done and id(r) not in seen:
-                    seen.add(id(r))
-                    finished.append(r)
-            if len(self.queue) == 0 and not self._active():
+            if not self.busy():
                 break
-        return finished
+        return self._retired[n0:]
 
     # ----------------------------------------------------- straggler guard
     def straggler_p99(self) -> float:

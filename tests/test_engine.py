@@ -1,0 +1,324 @@
+"""Batched continuous-batching engine: parity, invariants, fault injection.
+
+The batched path must be a pure optimization: token-exact against the
+slot-wise reference on every schedule (whole-prompt, chunked prefill,
+token-budget interleaving), with admission/retirement behaving as a FIFO
+slot grid and CREST probes still confirming injected faults.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeConfig
+from repro.models import registry
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+CCFG = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg, model = registry.load("codeqwen1.5-7b", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    return cfg, model, params
+
+
+def _requests(cfg, lens, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, int(n)).astype(np.int32),
+                    max_new_tokens=max_new) for i, n in enumerate(lens)]
+
+
+def _run(model, params, cfg, lens, scfg, max_new=4, seed=0, max_steps=400):
+    eng = ServeEngine(model, params, CCFG, scfg)
+    reqs = _requests(cfg, lens, max_new=max_new, seed=seed)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_steps)
+    return reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# parity
+# ---------------------------------------------------------------------------
+
+def test_batched_equals_slotwise_token_exact(tiny_model):
+    """The tentpole guarantee: one jitted batched decode over the slot grid
+    produces exactly the tokens of the per-slot reference loop."""
+    cfg, model, params = tiny_model
+    lens = [8, 5, 12, 8, 3, 20]
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=False))
+    out, eng = _run(model, params, cfg, lens,
+                    ServeConfig(max_batch=2, max_len=64, batched=True,
+                                prefill_chunk=8))
+    assert eng.batched
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_chunked_prefill_and_budget_token_exact(tiny_model):
+    """Chunked prefill (prompt split across engine steps under a token
+    budget) must not change any emitted token."""
+    cfg, model, params = tiny_model
+    lens = [17, 8, 29, 4]
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=False))
+    out, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8, token_budget=8))
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_batched_decode_is_single_dispatch(tiny_model):
+    """All active slots decode in ONE decode_step call per engine step."""
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=4, max_len=64, batched=True))
+    for r in _requests(cfg, [8, 8, 8, 8]):
+        eng.submit(r)
+    calls = []
+    inner = eng._decode_fn
+    eng._decode_fn = lambda *a: calls.append(1) or inner(*a)
+    eng.step()
+    assert sum(s is not None for s in eng.slots) == 4
+    assert len(calls) == 1, "batched step must issue one decode dispatch"
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching invariants
+# ---------------------------------------------------------------------------
+
+def test_fifo_admission_and_slot_reuse(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=2, max_len=64, batched=True))
+    reqs = _requests(cfg, [8] * 5, max_new=3)
+    for r in reqs:
+        eng.submit(r)
+    admitted = []
+    for _ in range(100):
+        eng.step()
+        for s in eng.slots:
+            if s is not None and s.uid not in admitted:
+                admitted.append(s.uid)
+        if not eng.busy():
+            break
+    assert admitted == [0, 1, 2, 3, 4], "admission must be FIFO"
+    assert all(r.done for r in reqs)
+    assert all(s is None for s in eng.slots), "retirement must free slots"
+    assert not eng.queue
+
+
+def test_max_new_tokens_retirement_and_queue_drain(tiny_model):
+    cfg, model, params = tiny_model
+    reqs, eng = _run(model, params, cfg, [8] * 6,
+                     ServeConfig(max_batch=3, max_len=64, batched=True),
+                     max_new=5)
+    assert all(r.done for r in reqs)
+    assert all(len(r.tokens_out) == 5 for r in reqs)
+    assert not eng.busy()
+    m = eng.metrics()
+    assert m["requests_finished"] == 6
+    assert m["decode_tokens"] == 6 * 4          # first token comes from prefill
+    assert m["tokens_per_s"] > 0
+
+
+def test_eos_retirement_frees_slot_early(tiny_model):
+    """Set eos_id to the first decode token of request 0 (learned from a dry
+    run): the request must retire early and its slot be reused."""
+    cfg, model, params = tiny_model
+    probe, _ = _run(model, params, cfg, [8],
+                    ServeConfig(max_batch=1, max_len=64, batched=True),
+                    max_new=8)
+    eos = probe[0].tokens_out[1]                # first *decoded* token
+    reqs, eng = _run(model, params, cfg, [8],
+                     ServeConfig(max_batch=1, max_len=64, batched=True, eos_id=eos),
+                     max_new=8)
+    assert reqs[0].done
+    assert len(reqs[0].tokens_out) == 2, reqs[0].tokens_out
+    assert reqs[0].tokens_out[-1] == eos
+
+
+def test_budgeted_prefill_interleaves_with_decode(tiny_model):
+    """While a long prompt is being chunk-prefilled, an already-resident
+    stream must keep producing tokens (bounded decode latency)."""
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=2, max_len=64, batched=True,
+                                  prefill_chunk=4, token_budget=4))
+    short, long_ = _requests(cfg, [4, 40], max_new=16)
+    eng.submit(short)
+    eng.step()                                  # short becomes resident
+    eng.submit(long_)
+    progressed = False
+    for _ in range(4):                          # 40-token prompt needs 10 chunks
+        before = len(short.tokens_out)
+        eng.step()
+        if eng._staging is not None and len(short.tokens_out) > before:
+            progressed = True
+    assert progressed, "decode must advance while a prompt is mid-prefill"
+    eng.run_until_drained(200)
+    assert short.done and long_.done
+
+
+def test_evict_and_abort_in_flight(tiny_model):
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=2, max_len=64, batched=True))
+    reqs = _requests(cfg, [8, 8, 8], max_new=8)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    aborted = eng.abort_in_flight()
+    assert {r.uid for r in aborted} == {0, 1}
+    assert all(s is None for s in eng.slots)
+    assert eng.busy()                           # uid 2 still queued
+    eng.run_until_drained(100)
+    assert reqs[2].done
+
+
+def test_failover_clone_continues_token_exact(tiny_model):
+    """A request re-queued after replica death must finish with exactly the
+    tokens an unkilled run would have produced (greedy decode + idempotent
+    regenerate from prompt + emitted prefix)."""
+    from repro.serve.elastic import ReplicaSet
+    cfg, model, params = tiny_model
+    ref, _ = _run(model, params, cfg, [8], ServeConfig(max_batch=1, max_len=64),
+                  max_new=8, seed=3)
+    scfg = ServeConfig(max_batch=1, max_len=64)
+    rs = ReplicaSet([ServeEngine(model, params, CCFG, scfg) for _ in range(2)])
+    victim = _requests(cfg, [8], max_new=8, seed=3)[0]
+    rs.submit(victim)
+    for _ in range(3):                         # prefill + a couple of decodes
+        rs.step()
+    killed_on = next(i for i, e in enumerate(rs.engines) if victim in e.slots)
+    rs.kill_replica(killed_on)
+    rs.drain(max_steps=200)
+    clone = rs.requeued[0]
+    assert clone.done
+    assert clone.tokens_out == ref[0].tokens_out, (clone.tokens_out, ref[0].tokens_out)
+
+
+def test_double_failover_still_token_exact(tiny_model):
+    """Two successive replica deaths: the rebuild must never double-bake
+    emitted tokens into the prompt (prompt_carried bookkeeping)."""
+    from repro.serve.elastic import ReplicaSet
+    cfg, model, params = tiny_model
+    ref, _ = _run(model, params, cfg, [8], ServeConfig(max_batch=1, max_len=64),
+                  max_new=10, seed=5)
+    scfg = ServeConfig(max_batch=1, max_len=64)
+    rs = ReplicaSet([ServeEngine(model, params, CCFG, scfg) for _ in range(3)])
+    victim = _requests(cfg, [8], max_new=10, seed=5)[0]
+    rs.submit(victim)
+    live = victim
+    for _ in range(2):                         # kill whichever replica holds it, twice
+        for _ in range(3):
+            rs.step()
+        holder = next(i for i, e in enumerate(rs.engines)
+                      if live in e.slots and rs.health[i].alive)
+        rs.kill_replica(holder)
+        live = rs.requeued[-1]
+    rs.drain(max_steps=300)
+    assert live.done
+    assert live.tokens_out == ref[0].tokens_out, (live.tokens_out, ref[0].tokens_out)
+
+
+def test_unservable_prompts_rejected_not_crashed(tiny_model):
+    """Oversized and empty prompts are rejected at admission (never crash or
+    clobber the cache); the queue behind them still drains."""
+    cfg, model, params = tiny_model
+    for batched in (True, False):
+        reqs, eng = _run(model, params, cfg, [30, 0, 6],
+                         ServeConfig(max_batch=2, max_len=16, batched=batched,
+                                     prefill_chunk=8), max_new=3)
+        assert reqs[0].done and reqs[0].tokens_out == []   # too long
+        assert reqs[1].done and reqs[1].tokens_out == []   # empty
+        assert reqs[2].done and len(reqs[2].tokens_out) == 3
+        assert not eng.busy()
+
+
+# ---------------------------------------------------------------------------
+# CREST through the batched path
+# ---------------------------------------------------------------------------
+
+def test_crest_confirms_faults_through_batched_engine(tiny_model):
+    from repro.core import crest as crest_mod
+    cfg, model, params = tiny_model
+    scfg = ServeConfig(max_batch=2, max_len=48, batched=True,
+                       crest_enabled=True, crest_every=1,
+                       crest_cfg=crest_mod.CrestConfig(n_spares=8, threshold=2))
+    eng = ServeEngine(model, params, CCFG, scfg)
+    assert eng.batched
+    eng.fault_mask = crest_mod.inject_column_faults(jax.random.PRNGKey(7), cfg.vocab, 3)
+    for r in _requests(cfg, [8] * 4, max_new=16):
+        eng.submit(r)
+    eng.run_until_drained(200)
+    for _ in range(3 * cfg.vocab // scfg.crest_cfg.n_spares):
+        eng._steps += 1
+        eng._crest_probe()
+    rep = eng.crest_report()
+    assert rep["confirmed_faults"] >= 3, rep
+    assert rep["repaired"] >= 3, rep
+
+
+# ---------------------------------------------------------------------------
+# cache plumbing
+# ---------------------------------------------------------------------------
+
+def test_kv_dtype_plumbs_into_stacked_cache(tiny_model):
+    cfg, model, params = tiny_model
+    ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32,
+                         kv_dtype=jnp.float8_e4m3fn)
+    eng = ServeEngine(model, params, ccfg,
+                      ServeConfig(max_batch=2, max_len=64, batched=True))
+    leaves = jax.tree.leaves(eng.cache)
+    kv = [l for l in leaves if l.ndim >= 4]     # (L, B, T, H, D) buffers
+    assert kv and all(l.dtype == jnp.float8_e4m3fn for l in kv)
+    # prefill-built caches follow too
+    toks = jnp.zeros((1, 8), jnp.int32)
+    _, cache = model.prefill(params, {"tokens": toks}, ccfg, max_len=16)
+    assert cache["layers"]["k"].dtype == jnp.float8_e4m3fn
+
+
+def test_cache_slot_roundtrip(tiny_model):
+    """write_cache(cache_at(...)) is the failover handoff primitive: a slot
+    written into a stacked grid reads back bit-identical."""
+    cfg, model, params = tiny_model
+    toks = jnp.asarray(np.arange(8)[None, :], jnp.int32)
+    _, sub = model.prefill(params, {"tokens": toks}, CCFG, max_len=16)
+    stacked = model.init_cache(4, 16, dtype=jnp.float32)
+    stacked = model.write_cache(stacked, sub, 2)
+    back = model.cache_at(stacked, 2)
+    for a, b in zip(jax.tree.leaves(sub), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    # stack_caches builds the same grid from per-request caches
+    restacked = model.stack_caches([model.cache_at(stacked, i) for i in range(4)])
+    for a, b in zip(jax.tree.leaves(restacked), jax.tree.leaves(stacked)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_prefill_extend_matches_prefill(tiny_model):
+    """Chunked extend over a fresh cache == one-shot prefill (logits of the
+    last prompt token and the written K/V both match)."""
+    cfg, model, params = tiny_model
+    prompt = np.arange(11, dtype=np.int32) % cfg.vocab
+    logits_p, cache_p = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None, :])}, CCFG, max_len=16)
+    cache = model.init_cache(1, 16, dtype=jnp.float32)
+    logits_e = None
+    for start in range(0, len(prompt), 4):
+        piece = prompt[start:start + 4]
+        toks = np.zeros((1, 4), np.int32)
+        toks[0, :len(piece)] = piece
+        logits_e, cache = model.prefill_extend(
+            params, {"tokens": jnp.asarray(toks)}, cache, CCFG,
+            n_valid=jnp.int32(len(piece)))
+    np.testing.assert_allclose(np.asarray(logits_e), np.asarray(logits_p),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cache["layers"]["pos"]),
+                                  np.asarray(cache_p["layers"]["pos"]))

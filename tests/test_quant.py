@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import quant
 
@@ -19,10 +20,11 @@ def test_fp4_codec_roundtrip_all_codes():
 
 
 def test_fp4_encode_matches_native_cast():
-    x = jnp.linspace(-8, 8, 1001)
-    ours = quant.fp4_decode(quant.fp4_encode(x))
-    native = x.astype(jnp.float4_e2m1fn).astype(jnp.float32)
-    np.testing.assert_array_equal(np.asarray(ours), np.asarray(native))
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    x = np.linspace(-8, 8, 1001, dtype=np.float32)
+    ours = quant.fp4_decode(quant.fp4_encode(jnp.asarray(x)))
+    native = x.astype(ml_dtypes.float4_e2m1fn).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(ours), native)
 
 
 def test_pack_unpack_identity():

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, strategies as st
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -167,8 +168,8 @@ def test_grad_compression_allreduce_shardmap():
     from jax.sharding import PartitionSpec as P
     from repro.optim import grad_compression as gc
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 8))}
     r = gc.init_residuals(g)
 
@@ -304,7 +305,7 @@ def test_serve_engine_continuous_batching():
         eng.submit(r)
     for _ in range(100):
         eng.step()
-        if not eng.queue and not any(s is not None for s in eng.slots):
+        if not eng.busy():
             break
     assert all(r.done for r in reqs)
     assert all(len(r.tokens_out) == 4 for r in reqs)
@@ -352,7 +353,7 @@ def test_serve_engine_crest_bist_detects_injected_faults():
                            max_new_tokens=16))
     for _ in range(200):
         eng.step()
-        if not eng.queue and not any(s is not None for s in eng.slots):
+        if not eng.busy():
             break
     # the BIST cycle keeps running between traffic bursts (paper: stress
     # testing in idle periods, Section 20.5)
@@ -379,8 +380,8 @@ def test_moe_ep_shardmap_matches_jit_dispatch_single_device():
     ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
     params = moe_ffn_init(jax.random.PRNGKey(0), cfg, ccfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     y_jit = moe_ffn_apply(params, x, cfg, ccfg)
     y_ep = moe_ffn_apply_ep(params, x, cfg, ccfg, mesh)
     np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_jit),
@@ -406,8 +407,8 @@ cfg = dataclasses.replace(cfg, moe_capacity_factor=50.0)
 ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
 params = moe_ffn_init(jax.random.PRNGKey(0), cfg, ccfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 y_jit = moe_ffn_apply(params, x, cfg, ccfg)
 with mesh:
     y_ep = moe_ffn_apply_ep(params, x, cfg, ccfg, mesh)
