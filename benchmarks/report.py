@@ -44,18 +44,25 @@ def main():
               f"| {o.get('dominant','—')} | {t.get('compute','—')} | {t.get('memory','—')} "
               f"| {t.get('collective','—')} | {peak:.1f} | {o.get('useful_flops_ratio','—')} |")
 
-    # serving: batched vs slot-wise continuous-batching decode
-    if os.path.exists("results/serving.json"):
-        rows = json.load(open("results/serving.json"))
+    # serving: batched vs slot-wise continuous-batching decode, per family
+    serving_path = next((p for p in ("results/bench_serving.json",
+                                     "results/serving.json")
+                         if os.path.exists(p)), None)
+    if serving_path:
+        rows = json.load(open(serving_path))
         print("\n## Serving decode throughput (benchmarks/serving.py)\n")
-        print("| batch | slotwise tok/s | batched tok/s | speedup | batched p99 step ms |")
-        print("|" + "---|" * 5)
-        by_batch = {}
+        print("| family | batch | slotwise tok/s | batched tok/s | speedup "
+              "| batched p99 step ms |")
+        print("|" + "---|" * 6)
+        by_key = {}
         for r in rows:
-            by_batch.setdefault(r["max_batch"], {})[r["mode"]] = r
-        for b in sorted(by_batch):
-            s, k = by_batch[b].get("slotwise", {}), by_batch[b].get("batched", {})
-            print(f"| {b} | {s.get('tokens_per_s','—')} | {k.get('tokens_per_s','—')} "
+            key = (r.get("family", r.get("arch", "?")), r["max_batch"])
+            by_key.setdefault(key, {})[r["mode"]] = r
+        for fam, b in sorted(by_key):
+            s = by_key[(fam, b)].get("slotwise", {})
+            k = by_key[(fam, b)].get("batched", {})
+            print(f"| {fam} | {b} | {s.get('tokens_per_s','—')} "
+                  f"| {k.get('tokens_per_s','—')} "
                   f"| {k.get('speedup_vs_slotwise','—')}x | {k.get('step_ms_p99','—')} |")
 
     # CASCADE invariant check: forward graphs with zero all-reduce bytes

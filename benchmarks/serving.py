@@ -1,4 +1,5 @@
-"""Serving-path benchmark: batched vs slot-wise continuous-batching decode.
+"""Serving-path benchmark: batched vs slot-wise continuous-batching decode,
+across every registry arch family.
 
 Measures steady-state decode throughput of ``ServeEngine`` across batch
 sizes, in both engine modes:
@@ -8,13 +9,20 @@ sizes, in both engine modes:
   times per engine step);
 * ``batched``  — the stacked-cache grid: ONE donated, jitted ``decode_step``
   over all slots per engine step (weight streaming paid once — the paper's
-  Table 9/10 batching balance).
+  Table 9/10 batching balance). Every family runs it over its own state:
+  full KV, MLA latents, ring buffers + recurrent {conv, h}, SSD state.
 
-Emits one JSON row per (mode, batch) into ``results/serving.json`` in the
-same row style the roofline sweeps use (``arch``/``shape``/``status`` keys),
-so ``benchmarks/report.py`` renders it alongside the other tables.
+Emits one JSON row per (arch, mode, batch) into ``--out`` in the same row
+style the roofline sweeps use (``arch``/``shape``/``status`` keys), so
+``benchmarks/report.py`` renders it alongside the other tables.
 
-Run: PYTHONPATH=src:. python -m benchmarks.serving [--out results/serving.json]
+``--min-speedup X`` turns the run into a REGRESSION GATE: exit non-zero if
+batched throughput is below X times slot-wise for any covered arch/batch
+(CI runs this at 1.5x and uploads the JSON as a workflow artifact).
+
+Run: PYTHONPATH=src:. python -m benchmarks.serving \
+        [--archs transformer moe griffin ssm] [--batches 2]
+        [--min-speedup 1.5] [--out results/bench_serving.json]
 """
 from __future__ import annotations
 
@@ -22,28 +30,41 @@ import argparse
 import dataclasses
 import json
 import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-ARCH = "codeqwen1.5-7b"
-#: large enough that weight streaming (not dispatch overhead alone)
-#: dominates a decode step, small enough for CPU CI
-DIMS = dict(d_model=256, n_layers=4, d_ff=1024, vocab=2048,
-            n_heads=8, n_kv_heads=8)
+#: per-family dimension overrides on top of the smoke config: large enough
+#: that weight streaming (not dispatch overhead alone) dominates a decode
+#: step, small enough for CPU CI
+FAMILY_DIMS = {
+    "transformer": dict(d_model=256, n_layers=4, d_ff=1024, vocab=2048,
+                        n_heads=8, n_kv_heads=8),
+    "moe": dict(d_model=256, n_layers=3, vocab=2048, moe_d_ff=512,
+                dense_d_ff=1024, kv_lora=64, q_lora=96),
+    "griffin": dict(d_model=256, n_layers=5, d_ff=768, vocab=2048,
+                    lru_width=256, window=64),
+    "ssm": dict(d_model=256, n_layers=4, d_inner=512, ssm_head_dim=64,
+                vocab=2048),
+}
 PROMPT_LEN = 16
 MEASURE_STEPS = 24
 WARMUP_STEPS = 3
+REPEATS = 3       # best-of-N throughput per mode: one noisy-neighbor burst
+                  # on a shared CI runner must not fail the gate
 
 
-def build_engine(batched: bool, max_batch: int):
+def build_engine(family: str, batched: bool, max_batch: int):
     from repro.core.cascade import CascadeConfig
     from repro.models import registry
     from repro.serve.engine import ServeConfig, ServeEngine
 
-    cfg = dataclasses.replace(registry.get_config(ARCH, smoke=True), **DIMS)
+    arch = registry.FAMILY_SMOKE[family]
+    cfg = dataclasses.replace(registry.get_config(arch, smoke=True),
+                              **FAMILY_DIMS[family])
     model = registry.build_model(cfg)
     ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
     params = model.init_params(jax.random.PRNGKey(0), ccfg)
@@ -52,10 +73,10 @@ def build_engine(batched: bool, max_batch: int):
     return cfg, ServeEngine(model, params, ccfg, scfg)
 
 
-def bench_mode(batched: bool, max_batch: int) -> dict:
+def bench_mode(family: str, batched: bool, max_batch: int) -> dict:
     from repro.serve.engine import Request
 
-    cfg, eng = build_engine(batched, max_batch)
+    cfg, eng = build_engine(family, batched, max_batch)
     rng = np.random.default_rng(0)
     for i in range(max_batch):
         eng.submit(Request(uid=i,
@@ -65,14 +86,20 @@ def bench_mode(batched: bool, max_batch: int) -> dict:
         eng.step()
     assert all(s is not None for s in eng.slots)
     eng.step_times.clear()                  # drop trace/compile steps from p50/p99
-    t0 = time.perf_counter()
-    produced = 0
-    for _ in range(MEASURE_STEPS):
-        produced += eng.step()
-    dt = time.perf_counter() - t0
+    best_dt, produced = float("inf"), 0
+    for _ in range(REPEATS):                # best-of-N: robust to CPU bursts
+        t0 = time.perf_counter()
+        rep = 0
+        for _ in range(MEASURE_STEPS):
+            rep += eng.step()
+        dt = time.perf_counter() - t0
+        if dt < best_dt:
+            best_dt, produced = dt, rep
+    dt = best_dt
     m = eng.metrics()
     return {
-        "arch": ARCH,
+        "arch": cfg.name,
+        "family": family,
         "shape": f"serve_decode_b{max_batch}",
         "mode": "batched" if batched else "slotwise",
         "status": "ok",
@@ -86,26 +113,43 @@ def bench_mode(batched: bool, max_batch: int) -> dict:
 
 
 def main():
+    from repro.models import registry
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="results/serving.json")
+    ap.add_argument("--out", default="results/bench_serving.json")
+    ap.add_argument("--archs", nargs="*", default=sorted(registry.FAMILY_SMOKE),
+                    choices=sorted(registry.FAMILY_SMOKE),
+                    help="arch families to cover")
     ap.add_argument("--batches", type=int, nargs="*", default=[1, 2, 4, 8])
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail (exit 1) if batched/slotwise throughput falls "
+                         "below this for any covered arch (0 = report only)")
     args = ap.parse_args()
 
-    rows = []
-    for b in args.batches:
-        slot = bench_mode(batched=False, max_batch=b)
-        bat = bench_mode(batched=True, max_batch=b)
-        speedup = bat["tokens_per_s"] / max(slot["tokens_per_s"], 1e-9)
-        bat["speedup_vs_slotwise"] = slot["speedup_vs_slotwise"] = round(speedup, 2)
-        rows += [slot, bat]
-        print(f"b={b:2d}  slotwise {slot['tokens_per_s']:9.1f} tok/s   "
-              f"batched {bat['tokens_per_s']:9.1f} tok/s   "
-              f"speedup {speedup:5.2f}x")
+    rows, failures = [], []
+    for family in args.archs:
+        for b in args.batches:
+            slot = bench_mode(family, batched=False, max_batch=b)
+            bat = bench_mode(family, batched=True, max_batch=b)
+            speedup = bat["tokens_per_s"] / max(slot["tokens_per_s"], 1e-9)
+            bat["speedup_vs_slotwise"] = slot["speedup_vs_slotwise"] = round(speedup, 2)
+            rows += [slot, bat]
+            print(f"{family:12s} b={b:2d}  "
+                  f"slotwise {slot['tokens_per_s']:9.1f} tok/s   "
+                  f"batched {bat['tokens_per_s']:9.1f} tok/s   "
+                  f"speedup {speedup:5.2f}x")
+            if args.min_speedup > 0 and speedup < args.min_speedup:
+                failures.append(f"{family} b={b}: {speedup:.2f}x "
+                                f"< {args.min_speedup:.2f}x")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"wrote {len(rows)} rows -> {args.out}")
+    if failures:
+        print("BENCH REGRESSION GATE FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--no-fp4", action="store_true", help="serve bf16 baseline")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="> 0 enables seeded sampling (default: greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k best logits (0 = all)")
     args = ap.parse_args()
 
     import jax
@@ -40,7 +44,8 @@ def main():
         params = cascade.tree_to_serve_fp4(params, ccfg)
 
     scfg = ServeConfig(max_batch=args.max_batch,
-                       max_len=args.prompt_len + args.max_new + 1)
+                       max_len=args.prompt_len + args.max_new + 1,
+                       temperature=args.temperature, top_k=args.top_k)
     eng = ServeEngine(model, params, ccfg, scfg)
 
     rng = np.random.default_rng(0)

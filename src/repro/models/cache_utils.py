@@ -1,0 +1,105 @@
+"""Generic continuous-batching slot operations over arbitrary cache pytrees.
+
+The serving engine keeps ONE fixed-shape stacked cache for the whole slot
+grid and admits/retires requests as slot writes (``serve/engine.py``). The
+slot axis is not uniform across leaves: layer-stacked buffers are
+``(L, B, ...)`` (slot axis 1), while per-layer Python-list caches (MoE dense
+layers, Griffin tail blocks) and grid-level position tables are ``(B, ...)``
+(slot axis 0). Rather than hand-annotating every model's cache schema, the
+axis of each leaf is discovered once by **probing**: build the cache at two
+batch sizes and record, per leaf, the single axis whose extent changed.
+
+Every cache leaf must therefore carry a batch/slot dimension — scalar
+bookkeeping (e.g. a shared position counter) has to be stored per-slot,
+which is what continuous batching needs anyway.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+#: probe shapes — small enough to be free, distinct enough to be unambiguous
+_PROBE_BATCHES = (2, 3)
+_PROBE_LEN = 8
+
+
+def probe_slot_axes(init_cache: Callable[..., Any], probe_len: int = _PROBE_LEN) -> Any:
+    """Pytree of per-leaf slot-axis indices, discovered by shape probing.
+
+    ``init_cache(batch, max_len)`` is called at two batch sizes; for each
+    leaf exactly one axis must differ — that axis is the slot axis.
+    """
+    b0, b1 = _PROBE_BATCHES
+    small, big = init_cache(b0, probe_len), init_cache(b1, probe_len)
+
+    def axis_of(a, b):
+        diffs = [i for i, (p, q) in enumerate(zip(a.shape, b.shape)) if p != q]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"cache leaf {a.shape} -> {b.shape}: expected exactly one "
+                f"batch-dependent axis, found {diffs} — every cache leaf "
+                "must carry a per-slot dimension")
+        return diffs[0]
+
+    return jax.tree.map(axis_of, small, big)
+
+
+def stack_caches(spec: Any, caches: List[Any]) -> Any:
+    """Concatenate per-request caches along each leaf's slot axis."""
+    return jax.tree.map(lambda ax, *xs: jnp.concatenate(xs, axis=ax), spec, *caches)
+
+
+def cache_at(spec: Any, cache: Any, i) -> Any:
+    """Batch-1 view of slot ``i`` (failover handoff / inspection)."""
+    return jax.tree.map(
+        lambda ax, x: lax.dynamic_slice_in_dim(x, i, 1, axis=ax), spec, cache)
+
+
+def write_cache(spec: Any, cache: Any, sub: Any, i) -> Any:
+    """Write a batch-1 cache ``sub`` into slot ``i`` of a stacked cache."""
+    return jax.tree.map(
+        lambda ax, c, s: lax.dynamic_update_slice_in_dim(
+            c, s.astype(c.dtype), i, axis=ax),
+        spec, cache, sub)
+
+
+def take_last_valid(x: jax.Array, n_valid) -> jax.Array:
+    """(B, S, ...) -> (B, 1, ...) slice at index ``n_valid - 1`` per row.
+
+    The chunked-prefill epilogue: chunks are right-padded, so the logits
+    row that continues the stream is the last VALID one, not row S-1.
+    ``n_valid`` may be a traced scalar.
+    """
+    b = x.shape[0]
+    nv = jnp.asarray(x.shape[1] if n_valid is None else n_valid, jnp.int32)
+    last = jnp.broadcast_to(nv, (b,)) - 1
+    return jax.vmap(lambda xi, j: lax.dynamic_slice_in_dim(xi, j, 1, axis=0))(x, last)
+
+
+class StackedCacheMixin:
+    """Stacked-cache protocol shared by every registry model.
+
+    Provides ``stack_caches`` / ``cache_at`` / ``write_cache`` on top of the
+    model's own ``init_cache``; the per-leaf slot axes are probed lazily on
+    first use and memoized (pure Python ints — safe to reuse across jit
+    traces, including under donation).
+    """
+
+    _slot_axes: Any = None
+
+    def _slot_spec(self):
+        if self._slot_axes is None:
+            self._slot_axes = probe_slot_axes(self.init_cache)
+        return self._slot_axes
+
+    def stack_caches(self, caches: list):
+        return stack_caches(self._slot_spec(), caches)
+
+    def cache_at(self, cache, i):
+        return cache_at(self._slot_spec(), cache, i)
+
+    def write_cache(self, cache, sub, i):
+        return write_cache(self._slot_spec(), cache, sub, i)

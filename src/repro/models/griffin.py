@@ -25,12 +25,13 @@ def _remat_policy(name: str):
         "none": _jax.checkpoint_policies.nothing_saveable,
         "save_all": _jax.checkpoint_policies.everything_saveable,
     }[name]
-from repro.models.ssm import _causal_conv, _conv_decode
+from repro.models.cache_utils import StackedCacheMixin, take_last_valid
+from repro.models.ssm import _causal_conv, _conv_decode, _conv_extend, conv_prefill_state
 
 _C = 8.0  # RG-LRU gate sharpness constant (Griffin paper)
 
 
-class GriffinLM:
+class GriffinLM(StackedCacheMixin):
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.lru = cfg.lru_width or cfg.d_model
@@ -47,6 +48,9 @@ class GriffinLM:
         self.group = pat
         self.n_groups = cfg.n_layers // len(pat)
         self.n_tail = cfg.n_layers - self.n_groups * len(pat)  # trailing R's
+        # windowed attention + O(1) recurrent state: serving context length
+        # is unbounded by the cache (engine admission checks this)
+        self.unbounded_context = self.attn_cfg.window > 0
 
     # ------------------------------------------------------------------ init
     def _rblock_init(self, key, ccfg):
@@ -97,16 +101,26 @@ class GriffinLM:
         return params
 
     # --------------------------------------------------------------- RG-LRU
-    def _rglru(self, lp, y, ccfg, h0=None, mode="full"):
-        """y: (b, s, lru) post-conv input. Returns (out, h_last)."""
+    def _rglru(self, lp, y, ccfg, h0=None, mode="full", n_valid=None):
+        """y: (b, s, lru) post-conv input. Returns (out, h_last). In
+        ``extend`` mode only the first ``n_valid`` steps are real: pad steps
+        are forced to the identity recurrence (a=1, input=0) so the carried
+        state lands exactly on the n_valid boundary."""
         r = jax.nn.sigmoid(cascade.linear_apply(lp["wa"], y, ccfg).astype(jnp.float32))
         i = jax.nn.sigmoid(cascade.linear_apply(lp["wx"], y, ccfg).astype(jnp.float32))
         log_a = -_C * r * jax.nn.softplus(lp["lam"])        # (b,s,lru) <= 0
-        a = jnp.exp(log_a)
-        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * y.astype(jnp.float32))
         if mode == "decode":
+            a = jnp.exp(log_a)
+            gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * y.astype(jnp.float32))
             h = a[:, 0] * h0 + gated[:, 0]
             return h[:, None].astype(y.dtype), h
+        if n_valid is not None:
+            m = (jnp.arange(y.shape[1]) < n_valid)[None, :, None]
+            log_a = jnp.where(m, log_a, 0.0)                # pad: a = exp(0) = 1
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * y.astype(jnp.float32))
+        if n_valid is not None:
+            gated = jnp.where(m, gated, 0.0)                # pad: zero input
         # associative scan: h_t = a_t h_{t-1} + g_t
         def combine(c1, c2):
             a1, g1 = c1
@@ -117,7 +131,7 @@ class GriffinLM:
             hh = hh + aa * h0[:, None]
         return hh.astype(y.dtype), hh[:, -1]
 
-    def _rblock(self, lp, x, ccfg, cache=None, mode="full"):
+    def _rblock(self, lp, x, ccfg, cache=None, mode="full", n_valid=None):
         cfg = self.cfg
         u = L.norm_apply(lp["ln"], x, cfg.norm_type)
         gate = jax.nn.gelu(cascade.linear_apply(lp["w_gate"], u, ccfg).astype(jnp.float32))
@@ -126,32 +140,39 @@ class GriffinLM:
             y_c, new_conv = _conv_decode(y, cache["conv"], lp["conv_w"], lp["conv_b"])
             out, h_last = self._rglru(lp, y_c, ccfg, cache["h"], mode)
             new_cache = {"conv": new_conv, "h": h_last}
+        elif mode == "extend":
+            y_c, new_conv = _conv_extend(y, cache["conv"], lp["conv_w"],
+                                         lp["conv_b"], n_valid)
+            out, h_last = self._rglru(lp, y_c, ccfg, cache["h"], mode, n_valid)
+            new_cache = {"conv": new_conv, "h": h_last}
         else:
             y_c = _causal_conv(y, lp["conv_w"], lp["conv_b"])
             out, h_last = self._rglru(lp, y_c, ccfg, None, mode)
-            new_cache = ({"conv": y[:, -(cfg.conv_width - 1):], "h": h_last}
+            new_cache = ({"conv": conv_prefill_state(y, cfg.conv_width), "h": h_last}
                          if mode == "prefill" else None)
         mixed = cascade.linear_apply(lp["w_out"], (out.astype(jnp.float32) * gate).astype(x.dtype), ccfg)
         x = x + mixed
         x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type), cfg.mlp_kind, ccfg)
         return constrain_residual(x), new_cache
 
-    def _ablock(self, lp, x, ccfg, cache=None, mode="full", max_len=None):
+    def _ablock(self, lp, x, ccfg, cache=None, mode="full", max_len=None, n_valid=None):
         cfg = self.cfg
         h, nc = L.attn_apply(lp["attn"], L.norm_apply(lp["ln"], x, cfg.norm_type),
-                             self.attn_cfg, ccfg, cache=cache, mode=mode, max_len=max_len)
+                             self.attn_cfg, ccfg, cache=cache, mode=mode, max_len=max_len,
+                             n_valid=n_valid)
         x = x + h
         x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type), cfg.mlp_kind, ccfg)
         return constrain_residual(x), nc
 
-    def _group_apply(self, gp, x, ccfg, gcache=None, mode="full", max_len=None):
+    def _group_apply(self, gp, x, ccfg, gcache=None, mode="full", max_len=None,
+                     n_valid=None):
         new_cache = {}
         for i, kind in enumerate(self.group):
             c = gcache[f"b{i}"] if gcache is not None else None
             if kind == "R":
-                x, nc = self._rblock(gp[f"b{i}"], x, ccfg, c, mode)
+                x, nc = self._rblock(gp[f"b{i}"], x, ccfg, c, mode, n_valid)
             else:
-                x, nc = self._ablock(gp[f"b{i}"], x, ccfg, c, mode, max_len)
+                x, nc = self._ablock(gp[f"b{i}"], x, ccfg, c, mode, max_len, n_valid)
             new_cache[f"b{i}"] = nc
         return x, new_cache
 
@@ -224,4 +245,28 @@ class GriffinLM:
             x, nc = self._rblock(tp, x, ccfg, tc, "decode")
             new_tail.append(nc)
         logits = self._head(params, x, ccfg)
+        return logits, {"groups": new_g, "tail": new_tail}
+
+    def prefill_extend(self, params, batch, cache, ccfg, n_valid=None):
+        """Append a (right-padded) token chunk to an existing cache: the
+        local-attention ring buffers advance without ever clobbering
+        in-window entries, and RG-LRU/conv state carries across chunks
+        (pad steps are identity). This is how windowed archs chunk-prefill
+        arbitrarily long prompts through a fixed-shape kernel. Returns
+        logits for the last valid token, (B, 1, V)."""
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
+        nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
+
+        def body(x, scanned):
+            gp, c = scanned
+            y, nc = self._group_apply(gp, x, ccfg, c, "extend", n_valid=nv)
+            return y, nc
+
+        x, new_g = lax.scan(body, x, (params["groups"], cache["groups"]))
+        new_tail = []
+        for tp, tc in zip(params["tail"], cache["tail"]):
+            x, nc = self._rblock(tp, x, ccfg, tc, "extend", n_valid=nv)
+            new_tail.append(nc)
+        logits = self._head(params, take_last_valid(x, nv), ccfg)
         return logits, {"groups": new_g, "tail": new_tail}

@@ -204,8 +204,9 @@ def attn_apply(
     cache: dict | None = None,
     mode: str = "full",
     max_len: int | None = None,
+    n_valid=None,
 ) -> tuple[jax.Array, dict | None]:
-    """Attention with three modes:
+    """Attention with four modes:
 
     * ``full``    — causal (optionally windowed) self-attention, no cache.
     * ``prefill`` — same compute as ``full`` but also RETURNS a KV cache
@@ -215,9 +216,13 @@ def attn_apply(
                     full attention, or the window for local attention
                     (ring buffer, slot(p) = p %% window).
     * ``extend``  — append s tokens at each row's position (chunked prefill
-                    into an existing cache; full attention only). Rows may
-                    sit at different positions: this is the continuous-
-                    batching admission path.
+                    into an existing cache). Rows may sit at different
+                    positions: this is the continuous-batching admission
+                    path. Only the first ``n_valid`` chunk tokens are real;
+                    for full attention the pad K/V lands above the valid
+                    region (mask-invalid, overwritten by the next write),
+                    for ring buffers pad writes are dropped outright so
+                    they can never clobber in-window entries.
 
     Cache positions are per-row (B,) so a stacked slot grid can hold streams
     of different lengths; legacy scalar positions are broadcast.
@@ -249,8 +254,8 @@ def attn_apply(
         assert mode == "extend" or s == 1
         pos = pos_rows(cache["pos"], b)                 # (B,) next write index
         t = cache["k"].shape[1]
-        if cfg.window > 0:  # ring buffer (decode only: chunks don't wrap)
-            assert mode == "decode", "extend mode requires full attention"
+        nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
+        if cfg.window > 0 and mode == "decode":         # ring buffer, one token
             idx = pos % t
             ck = update_rows(cache["k"], k, idx)
             cv = update_rows(cache["v"], v, idx)
@@ -261,18 +266,44 @@ def attn_apply(
             valid = ((slot_pos >= 0) & (slot_pos <= pos[:, None])
                      & (pos[:, None] - slot_pos < cfg.window))[:, None, :]  # (B, 1, T)
             new_cache = {"k": ck, "v": cv, "pos": pos + 1, "slot_pos": slot_pos}
+            att_k, att_v = ck, cv
+        elif cfg.window > 0:  # ring-buffer chunked extend
+            # A chunk may overwrite ring entries that earlier chunk tokens
+            # still attend to, so attention runs over [ring, chunk] FIRST
+            # and only then are the valid chunk tokens scattered in (write
+            # index t = out of bounds = dropped). s <= t keeps within-chunk
+            # ring writes collision-free.
+            assert s <= t, "prefill chunk must fit inside the ring buffer"
+            slot_pos = pos_slots(cache["slot_pos"], b, t)
+            rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]   # (B, s)
+            key_pos = jnp.concatenate([slot_pos, rows], axis=1)             # (B, T+s)
+            att_k = jnp.concatenate([cache["k"].astype(jnp.float32),
+                                     k.astype(jnp.float32)], axis=1)
+            att_v = jnp.concatenate([cache["v"].astype(jnp.float32),
+                                     v.astype(jnp.float32)], axis=1)
+            valid = ((key_pos[:, None, :] >= 0)
+                     & (key_pos[:, None, :] <= rows[:, :, None])
+                     & (rows[:, :, None] - key_pos[:, None, :] < cfg.window))
+            widx = jnp.where(jnp.arange(s, dtype=jnp.int32)[None, :] < nv,
+                             rows % t, t)               # (B, s); t => dropped
+            scat = lambda bu, ne, ix: bu.at[ix].set(ne.astype(bu.dtype), mode="drop")
+            ck = jax.vmap(scat)(cache["k"], k, widx)
+            cv = jax.vmap(scat)(cache["v"], v, widx)
+            new_slot = jax.vmap(scat)(slot_pos, rows, widx)
+            new_cache = {"k": ck, "v": cv, "pos": pos + nv, "slot_pos": new_slot}
         else:
             ck = update_rows(cache["k"], k, pos)
             cv = update_rows(cache["v"], v, pos)
             rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]   # (B, s)
             valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]        # (B, s, T)
-            new_cache = {"k": ck, "v": cv, "pos": pos + s}
+            new_cache = {"k": ck, "v": cv, "pos": pos + nv}
+            att_k, att_v = ck, cv
         qd = q.astype(jnp.float32).reshape(b, s, hk, h // hk, hd)
-        logits = jnp.einsum("bshgd,bthd->bhgst", qd, ck.astype(jnp.float32)) * scale
-        # valid: (B, s, T) (or (B, 1, T) ring) -> (B, 1, 1, s, T) vs (b,hk,g,s,t)
+        logits = jnp.einsum("bshgd,bthd->bhgst", qd, att_k.astype(jnp.float32)) * scale
+        # valid: (B, s, T[+s]) (or (B, 1, T) ring) -> broadcast vs (b,hk,g,s,t)
         logits = jnp.where(valid[:, None, None], logits, -1e30)
         p = jax.nn.softmax(logits, axis=-1)
-        o = jnp.einsum("bhgst,bthd->bshgd", p, cv.astype(jnp.float32)).reshape(b, s, h, hd)
+        o = jnp.einsum("bhgst,bthd->bshgd", p, att_v.astype(jnp.float32)).reshape(b, s, h, hd)
     else:
         if cfg.q_chunk > 0 and s > cfg.q_chunk:
             o = _chunked_causal_sdpa(q, k, v, scale, cfg.q_chunk, cfg.window)
@@ -328,7 +359,11 @@ def _build_cache_from_prefill(k: jax.Array, v: jax.Array, cfg: AttnConfig, s: in
 def attn_cache_init(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
     hk, hd = cfg.n_kv_heads, cfg.head_dim
     if cfg.window > 0:
-        t = min(max_len, cfg.window)
+        # the ring must hold the FULL attention window regardless of
+        # max_len: windowed state is O(window), and a shorter ring would
+        # silently truncate attention for prompts beyond max_len (matching
+        # _build_cache_from_prefill, which also allocates t = window)
+        t = cfg.window
         return {
             "k": jnp.zeros((batch, t, hk, hd), dtype),
             "v": jnp.zeros((batch, t, hk, hd), dtype),

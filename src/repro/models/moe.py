@@ -24,6 +24,7 @@ from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain_expert_buffer, constrain_residual
 from repro.models import layers as L
+from repro.models.cache_utils import StackedCacheMixin, take_last_valid
 
 
 def _remat_policy(name: str):
@@ -58,11 +59,22 @@ def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
     return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
 
 
-def moe_ffn_apply(params: dict, x: jax.Array, cfg: ArchConfig, ccfg: CascadeConfig) -> jax.Array:
+def moe_ffn_apply(params: dict, x: jax.Array, cfg: ArchConfig, ccfg: CascadeConfig,
+                  no_drop: bool = False) -> jax.Array:
+    """Capacity-dispatched routed experts.
+
+    ``no_drop=True`` (serving paths) sizes the buffer for worst-case
+    routing skew so NO token is ever capacity-dropped: per-token outputs
+    then depend only on that token, never on batch composition — which is
+    what makes batched/chunked decode token-exact against the slot-wise
+    reference. top_k experts are DISTINCT per token, so one expert can
+    receive at most t assignments — capacity t suffices. Training keeps
+    the ``moe_capacity_factor`` drop semantics.
+    """
     b, s, d = x.shape
     t = b * s
     k, e = cfg.moe_top_k, cfg.n_experts
-    cap = _capacity(t, cfg)
+    cap = (-(-t // 8) * 8) if no_drop else _capacity(t, cfg)
     xf = x.reshape(t, d)
 
     logits = jnp.dot(xf.astype(jnp.float32), params["router"])       # (T, E)
@@ -136,7 +148,8 @@ def _mla_qkr(params, x, cfg, ccfg, positions):
     return q_nope, q_rope, c_kv, k_rope
 
 
-def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len=None):
+def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len=None,
+              n_valid=None):
     b, s, _ = x.shape
     h = cfg.n_heads
     scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
@@ -152,22 +165,27 @@ def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len
     w_k = wkv_b[..., : cfg.qk_nope_dim]                               # (lora, H, nope)
     w_v = wkv_b[..., cfg.qk_nope_dim:]                                # (lora, H, v)
 
-    if mode == "decode":
-        assert s == 1
+    if mode in ("decode", "extend"):
+        # decode: one new token; extend: a (right-padded) chunk of s tokens
+        # at each row's position — pad latents land mask-invalid above the
+        # valid region and are overwritten by the next write.
+        assert mode == "extend" or s == 1
         pos = L.pos_rows(cache["pos"], b)                     # (B,) per-slot
+        nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
         ckv = L.update_rows(cache["c_kv"], c_kv, pos)
         krp = L.update_rows(cache["k_rope"], k_rope, pos)
         t = ckv.shape[1]
+        rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B, s)
         # weight absorption: stay in latent space
         q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
         scores = (jnp.einsum("bshl,btl->bhst", q_lat, ckv.astype(jnp.float32))
                   + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), krp.astype(jnp.float32))) * scale
-        valid = jnp.arange(t)[None, :] <= pos[:, None]        # (B, T)
-        scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+        valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]       # (B, s, T)
+        scores = jnp.where(valid[:, None], scores, -1e30)
         p = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhst,btl->bshl", p, ckv.astype(jnp.float32))
         o = jnp.einsum("bshl,lhd->bshd", ctx, w_v.astype(jnp.float32))  # (b,s,H,v)
-        new_cache = {"c_kv": ckv, "k_rope": krp, "pos": pos + 1}
+        new_cache = {"c_kv": ckv, "k_rope": krp, "pos": pos + nv}
     else:
         # expand latents to per-head keys/values (prefill & train)
         k_nope = jnp.einsum("btl,lhd->bthd", c_kv.astype(jnp.float32), w_k.astype(jnp.float32))
@@ -209,7 +227,7 @@ def mla_cache_init(batch: int, max_len: int, cfg: ArchConfig, dtype=jnp.bfloat16
 # MoE LM (DeepSeek-V2 / OLMoE)
 # ---------------------------------------------------------------------------
 
-class MoELM:
+class MoELM(StackedCacheMixin):
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.use_mla = cfg.kv_lora > 0
@@ -260,35 +278,40 @@ class MoELM:
         return params
 
     # --------------------------------------------------------------- blocks
-    def _attn_apply(self, lp, x, ccfg, cache, mode, max_len=None):
+    def _attn_apply(self, lp, x, ccfg, cache, mode, max_len=None, n_valid=None):
         if self.use_mla:
-            return mla_apply(lp, x, self.cfg, ccfg, cache, mode, max_len)
-        return L.attn_apply(lp, x, self.attn_cfg, ccfg, cache=cache, mode=mode, max_len=max_len)
+            return mla_apply(lp, x, self.cfg, ccfg, cache, mode, max_len, n_valid=n_valid)
+        return L.attn_apply(lp, x, self.attn_cfg, ccfg, cache=cache, mode=mode,
+                            max_len=max_len, n_valid=n_valid)
 
-    def _block(self, lp, x, ccfg, cache, mode, moe: bool, max_len=None):
+    def _block(self, lp, x, ccfg, cache, mode, moe: bool, max_len=None, n_valid=None):
         cfg = self.cfg
         h, nc = self._attn_apply(lp["attn"], L.norm_apply(lp["ln1"], x, cfg.norm_type),
-                                 ccfg, cache, mode, max_len)
+                                 ccfg, cache, mode, max_len, n_valid)
         x = x + h
         u = L.norm_apply(lp["ln2"], x, cfg.norm_type)
         if moe:
-            x = x + self._moe_ffn(lp["moe"], u, ccfg)
+            # serving modes dispatch drop-free: capacity drops would make a
+            # token's output depend on unrelated slots / chunk boundaries,
+            # breaking batched-vs-slotwise parity (train keeps drops)
+            x = x + self._moe_ffn(lp["moe"], u, ccfg, no_drop=(mode != "full"))
         else:
             x = x + L.mlp_apply(lp["mlp"], u, "swiglu", ccfg)
         return constrain_residual(x), nc
 
-    def _moe_ffn(self, lp_moe, u, ccfg):
+    def _moe_ffn(self, lp_moe, u, ccfg, no_drop=False):
         """Dispatch strategy: shard_map expert parallelism when the launcher
         installed a policy with moe_ep=True (kills the GSPMD scatter
         all-reduce, see models/moe_shardmap.py); jit capacity-dispatch
-        otherwise (CPU tests / no mesh)."""
+        otherwise (CPU tests / no mesh). The EP path keeps capacity
+        semantics (it is a training/lowering surface, not the engine's)."""
         from repro.distributed.sharding import get_activation_policy
         pol = get_activation_policy()
         if pol and pol.get("moe_ep") and pol.get("mesh") is not None:
             from repro.models.moe_shardmap import moe_ffn_apply_ep
             return moe_ffn_apply_ep(lp_moe, u, self.cfg, ccfg, pol["mesh"],
                                     batch_axes=pol["batch_axes"])
-        return moe_ffn_apply(lp_moe, u, self.cfg, ccfg)
+        return moe_ffn_apply(lp_moe, u, self.cfg, ccfg, no_drop=no_drop)
 
     # --------------------------------------------------------------- api
     def _head(self, params, x, ccfg):
@@ -352,4 +375,27 @@ class MoELM:
 
         x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
         logits = self._head(params, x, ccfg)
+        return logits, {"dense_layers": new_dense, "layers": new_caches}
+
+    def prefill_extend(self, params, batch, cache, ccfg, n_valid=None):
+        """Append a (right-padded) token chunk to an existing MLA latent (or
+        GQA) cache — the continuous-batching admission path. Pad positions
+        never influence valid tokens (mask-invalid and overwritten by the
+        next write); routed experts see pad tokens but their outputs are
+        sliced away. Returns logits for the last valid token, (B, 1, V)."""
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
+        nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
+        new_dense = []
+        for dp, dc in zip(params["dense_layers"], cache["dense_layers"]):
+            x, nc = self._block(dp, x, ccfg, dc, "extend", moe=False, n_valid=nv)
+            new_dense.append(nc)
+
+        def body(x, scanned):
+            lp, c = scanned
+            y, nc = self._block(lp, x, ccfg, c, "extend", moe=True, n_valid=nv)
+            return y, nc
+
+        x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = self._head(params, take_last_valid(x, nv), ccfg)
         return logits, {"dense_layers": new_dense, "layers": new_caches}

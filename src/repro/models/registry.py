@@ -33,6 +33,16 @@ ALIASES = {
 }
 
 
+#: one representative arch per serving family — the engine parity tests and
+#: the serving benchmark/CI gate iterate over exactly these (smoke-sized)
+FAMILY_SMOKE = {
+    "transformer": "codeqwen1.5-7b",
+    "moe": "deepseek-v2-236b",        # MLA latent cache + routed experts
+    "griffin": "recurrentgemma-2b",   # ring-buffer KV + RG-LRU state
+    "ssm": "mamba2-370m",             # conv + SSD state
+}
+
+
 def canonical(arch_id: str) -> str:
     return ALIASES.get(arch_id, arch_id)
 

@@ -17,6 +17,7 @@ from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain_residual
 from repro.models import layers as L
+from repro.models.cache_utils import StackedCacheMixin, take_last_valid
 
 
 def _remat_policy(name: str):
@@ -129,7 +130,36 @@ def _conv_decode(x, conv_state, w, b):
     return y[:, None].astype(x.dtype), new_state
 
 
-class Mamba2LM:
+def _conv_extend(x, conv_state, w, b, n_valid=None):
+    """Causal conv over a chunk with carried state (chunked-prefill path).
+
+    x: (b,s,dim) raw conv inputs, only the first ``n_valid`` real;
+    conv_state: (b,width-1,dim) previous raw inputs. Returns the conv
+    outputs for the chunk and the state advanced to the ``n_valid``
+    boundary (so right-padding never leaks into the carry)."""
+    width = w.shape[0]
+    s = x.shape[1]
+    full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (b,w-1+s,dim)
+    y = sum(full[:, i:i + s] * w[i] for i in range(width)) + b
+    nv = s if n_valid is None else n_valid
+    new_state = lax.dynamic_slice_in_dim(full, nv, width - 1, axis=1)
+    return y, new_state.astype(conv_state.dtype)
+
+
+def conv_prefill_state(x_raw, width: int):
+    """Last ``width-1`` raw conv inputs after a whole-prompt prefill,
+    left-padded with zeros (the implicit causal-conv padding) when the
+    prompt is shorter than the conv receptive field."""
+    pad = max(0, (width - 1) - x_raw.shape[1])
+    if pad:
+        x_raw = jnp.pad(x_raw, ((0, 0), (pad, 0), (0, 0)))
+    return x_raw[:, -(width - 1):]
+
+
+class Mamba2LM(StackedCacheMixin):
+    #: recurrent state is O(1) in sequence length — no serving context limit
+    unbounded_context = True
+
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.d_inner = cfg.d_inner or 2 * cfg.d_model
@@ -174,7 +204,7 @@ class Mamba2LM:
         dt_raw = zxbcdt[..., di + self.conv_dim:]
         return z, xbc, dt_raw
 
-    def _mixer(self, lp, u, ccfg, cache=None, mode="full"):
+    def _mixer(self, lp, u, ccfg, cache=None, mode="full", n_valid=None):
         cfg = self.cfg
         b, s, _ = u.shape
         di, g, n, h = self.d_inner, cfg.ssm_groups, cfg.ssm_state, self.n_heads
@@ -184,6 +214,9 @@ class Mamba2LM:
 
         if mode == "decode":
             xbc_c, new_conv = _conv_decode(xbc, cache["conv"], lp["conv_w"], lp["conv_b"])
+        elif mode == "extend":
+            xbc_c, new_conv = _conv_extend(xbc, cache["conv"], lp["conv_w"],
+                                           lp["conv_b"], n_valid)
         else:
             xbc_c = _causal_conv(xbc, lp["conv_w"], lp["conv_b"])
             new_conv = None  # prefill cache built below from the raw conv input
@@ -192,23 +225,33 @@ class Mamba2LM:
         B = xbc_c[..., di: di + g * n].reshape(b, -1, g, n)
         C = xbc_c[..., di + g * n:].reshape(b, -1, g, n)
         dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+        if mode == "extend" and n_valid is not None:
+            # right-pad steps get dt=0: decay exp(0)=1 and zero input, so the
+            # recurrent state passes through padding exactly unchanged
+            dt = dt * (jnp.arange(s) < n_valid)[None, :, None]
         A = -jnp.exp(lp["A_log"])
 
         if mode == "decode":
             y, new_state = ssd_decode_step(x, dt, A, B, C, lp["D"], cache["state"])
             new_cache = {"conv": new_conv, "state": new_state}
+        elif mode == "extend":
+            y, final_state = ssd_chunked(x, dt, A, B, C, lp["D"], cfg.ssm_chunk,
+                                         initial_state=cache["state"])
+            new_cache = {"conv": new_conv, "state": final_state}
         else:
             y, final_state = ssd_chunked(x, dt, A, B, C, lp["D"], cfg.ssm_chunk)
             new_cache = None
             if mode == "prefill":
-                new_cache = {"conv": xbc[:, -(cfg.conv_width - 1):], "state": final_state}
+                new_cache = {"conv": conv_prefill_state(xbc, cfg.conv_width),
+                             "state": final_state}
 
         y = y.reshape(b, -1, di)
         y = L.norm_apply(lp["gnorm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype))
         return cascade.linear_apply(lp["out_proj"], y, ccfg), new_cache
 
-    def _block(self, lp, x, ccfg, cache, mode):
-        h, nc = self._mixer(lp, L.norm_apply(lp["ln"], x, self.cfg.norm_type), ccfg, cache, mode)
+    def _block(self, lp, x, ccfg, cache, mode, n_valid=None):
+        h, nc = self._mixer(lp, L.norm_apply(lp["ln"], x, self.cfg.norm_type), ccfg,
+                            cache, mode, n_valid)
         return constrain_residual(x + h), nc
 
     # --------------------------------------------------------------- api
@@ -245,7 +288,10 @@ class Mamba2LM:
                 "state": jnp.zeros((batch, h, p, n), jnp.float32),  # recurrent acc stays f32
             }
 
-        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers)), "pos": jnp.int32(0)}
+        # positions are per-slot (B,) so a stacked grid holds streams of
+        # different lengths (bookkeeping only — the recurrence is position-free)
+        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers)),
+                "pos": jnp.zeros((batch,), jnp.int32)}
 
     def prefill(self, params, batch, ccfg, max_len: int | None = None):
         def body(x, lp):
@@ -253,9 +299,10 @@ class Mamba2LM:
             return y, c
 
         x = L.embed_apply(params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
         x, caches = lax.scan(body, x, params["layers"])
         logits = self._head(params, x[:, -1:], ccfg)
-        return logits, {"layers": caches, "pos": jnp.int32(batch["tokens"].shape[1])}
+        return logits, {"layers": caches, "pos": jnp.full((b,), s, jnp.int32)}
 
     def decode_step(self, params, batch, cache, ccfg):
         def body(x, scanned):
@@ -264,6 +311,27 @@ class Mamba2LM:
             return y, nc
 
         x = L.embed_apply(params["embed"], batch["tokens"])
+        b = batch["tokens"].shape[0]
         x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
         logits = self._head(params, x, ccfg)
-        return logits, {"layers": new_caches, "pos": cache["pos"] + 1}
+        return logits, {"layers": new_caches,
+                        "pos": L.pos_rows(cache["pos"], b) + 1}
+
+    def prefill_extend(self, params, batch, cache, ccfg, n_valid=None):
+        """Append a (right-padded) token chunk to an existing recurrent
+        cache: conv state carries across chunks and padded steps leave the
+        SSD state untouched (dt=0 passthrough). Returns logits for the last
+        valid token, (B, 1, V)."""
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
+        nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
+
+        def body(x, scanned):
+            lp, c = scanned
+            y, nc = self._block(lp, x, ccfg, c, "extend", n_valid=nv)
+            return y, nc
+
+        x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = self._head(params, take_last_valid(x, nv), ccfg)
+        return logits, {"layers": new_caches,
+                        "pos": L.pos_rows(cache["pos"], b) + nv}

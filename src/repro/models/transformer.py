@@ -20,6 +20,7 @@ from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain_residual
 from repro.models import layers as L
+from repro.models.cache_utils import StackedCacheMixin, take_last_valid
 
 
 def _remat_policy(name: str):
@@ -31,7 +32,7 @@ def _remat_policy(name: str):
     }[name]
 
 
-class TransformerLM:
+class TransformerLM(StackedCacheMixin):
     def __init__(self, cfg: ArchConfig):
         self.cfg = cfg
         self.attn_cfg = L.AttnConfig(
@@ -46,6 +47,9 @@ class TransformerLM:
             mrope_sections=cfg.mrope_sections,
             q_chunk=cfg.q_chunk,
         )
+        # windowed archs hold O(window) ring state, so the serving context
+        # length is unbounded by the cache (engine admission checks this)
+        self.unbounded_context = self.attn_cfg.window > 0
 
     # ------------------------------------------------------------------ init
     def _layer_init(self, key: jax.Array, ccfg: CascadeConfig) -> dict:
@@ -101,12 +105,13 @@ class TransformerLM:
         return logits.astype(jnp.float32)
 
     def _block(self, lp: dict, x: jax.Array, ccfg: CascadeConfig,
-               positions, cache, mode: str, max_len: int | None = None):
+               positions, cache, mode: str, max_len: int | None = None,
+               n_valid=None):
         cfg = self.cfg
         h, new_cache = L.attn_apply(
             lp["attn"], L.norm_apply(lp["ln1"], x, cfg.norm_type),
             self.attn_cfg, ccfg, positions=positions, cache=cache, mode=mode,
-            max_len=max_len)
+            max_len=max_len, n_valid=n_valid)
         x = x + h
         x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type),
                             cfg.mlp_kind, ccfg)
@@ -168,27 +173,10 @@ class TransformerLM:
         return logits, {"layers": new_caches}
 
     # ----------------------------------------- continuous batching cache API
-    # Stacked caches: every leaf is (L, B, ...) — the slot axis is axis 1.
-    # The serving engine keeps ONE fixed-shape cache for the whole slot grid
-    # and admits/retires requests as slot writes, so batched decode never
-    # recompiles as traffic comes and goes.
-
-    cache_slot_axis: int = 1
-
-    def stack_caches(self, caches: list) -> dict:
-        """Concatenate per-request caches along the slot axis."""
-        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *caches)
-
-    def cache_at(self, cache: dict, i) -> dict:
-        """Batch-1 view of slot ``i`` (failover handoff / inspection)."""
-        return jax.tree.map(
-            lambda x: lax.dynamic_slice_in_dim(x, i, 1, axis=1), cache)
-
-    def write_cache(self, cache: dict, sub: dict, i) -> dict:
-        """Write a batch-1 cache ``sub`` into slot ``i`` of a stacked cache."""
-        return jax.tree.map(
-            lambda c, s: lax.dynamic_update_slice_in_dim(c, s.astype(c.dtype), i, axis=1),
-            cache, sub)
+    # ``stack_caches``/``cache_at``/``write_cache`` come from
+    # StackedCacheMixin: the serving engine keeps ONE fixed-shape cache for
+    # the whole slot grid and admits/retires requests as slot writes, so
+    # batched decode never recompiles as traffic comes and goes.
 
     def prefill_extend(self, params: dict, batch: dict, cache: dict,
                        ccfg: CascadeConfig, n_valid=None):
@@ -196,25 +184,20 @@ class TransformerLM:
 
         Chunked-prefill admission path: the chunk shape stays fixed so long
         prompts compile ONE extend kernel regardless of length; only the
-        first ``n_valid`` tokens of the chunk are real. Pad K/V lands above
-        each row's position where it is mask-invalid and overwritten by the
-        next write. Returns logits for the last valid token, (B, 1, V).
+        first ``n_valid`` tokens of the chunk are real (full attention:
+        pad K/V lands mask-invalid above each row's position; ring buffers:
+        pad writes are dropped). Returns logits for the last valid token,
+        (B, 1, V).
         """
         x = self._embed(params, batch, ccfg)
         b, s, _ = x.shape
+        nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
 
         def body(x, scanned):
             lp, c = scanned
-            y, nc = self._block(lp, x, ccfg, None, c, "extend")
+            y, nc = self._block(lp, x, ccfg, None, c, "extend", n_valid=nv)
             return y, nc
 
         x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
-        if n_valid is None:
-            last = jnp.full((b,), s - 1, jnp.int32)
-        else:
-            nv = jnp.asarray(n_valid, jnp.int32)
-            last = jnp.broadcast_to(nv, (b,)) - 1
-            new_caches = {**new_caches, "pos": new_caches["pos"] - (s - nv)}
-        x_last = jax.vmap(lambda xi, j: lax.dynamic_slice_in_dim(xi, j, 1, axis=0))(x, last)
-        logits = self._head(params, x_last, ccfg)
+        logits = self._head(params, take_last_valid(x, nv), ccfg)
         return logits, {"layers": new_caches}

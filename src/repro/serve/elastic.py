@@ -10,7 +10,11 @@ the replica-set controller used by the serving example:
 * health scoring from per-step latency EWMAs,
 * **fail-in-place**: a replica marked dead stops receiving new admissions;
   its in-flight requests are re-queued to survivors (idempotent regenerate —
-  decode state is reconstructible from the prompt + emitted tokens),
+  decode state is reconstructible from the prompt + emitted tokens). This
+  holds for EVERY cache family, not just full-attention KV: ring-buffer KV,
+  RG-LRU/conv state and SSD state are all deterministic functions of the
+  token prefix, so the survivor's (chunked) re-prefill rebuilds them
+  exactly — there is nothing replica-local to checkpoint,
 * **straggler mitigation**: requests on a replica whose p99 step latency
   exceeds ``straggler_factor`` x the fleet median are eligible for
   speculative re-dispatch to the fastest healthy replica.
@@ -23,6 +27,31 @@ from typing import List, Optional
 import numpy as np
 
 from repro.serve.engine import Request, ServeEngine
+
+
+def rebuild_request(req: Request) -> Request:
+    """Failover clone of an in-flight request (the decode-state rebuild).
+
+    The clone's prompt is the current prompt + EVERY token emitted so far:
+    the survivor's admission prefill rebuilds the full cache state — KV,
+    ring-buffer or recurrent — and then generates the stream's next token,
+    so already-emitted history is never recomputed (which also makes
+    failover safe under temperature sampling, where a re-draw could rewrite
+    a token the client has already seen). Retirement still fires at the
+    ORIGINAL max_new_tokens since ``tokens_out`` carries over;
+    ``prompt_carried`` records how many ``tokens_out`` entries the prompt
+    now contains, so repeated failures never double-bake tokens.
+    Mid-prefill requests (no new tokens yet) are returned unchanged.
+    """
+    new = req.tokens_out[req.prompt_carried:]   # emitted since last rebuild
+    if not new:
+        return req
+    clone = Request(uid=req.uid,
+                    prompt=np.concatenate([req.prompt, np.asarray(new, np.int32)]),
+                    max_new_tokens=req.max_new_tokens)
+    clone.tokens_out = list(req.tokens_out)
+    clone.prompt_carried = len(clone.tokens_out)
+    return clone
 
 
 @dataclasses.dataclass
@@ -66,31 +95,19 @@ class ReplicaSet:
     def kill_replica(self, i: int):
         """Simulate a hard replica loss; re-queue its in-flight work.
 
-        Works for both engine modes: ``abort_in_flight`` frees the slot grid
-        (batched mode: the stacked-cache slots simply become garbage — decode
-        state is reconstructible from the prompt + emitted tokens)."""
+        Works for both engine modes and every cache family:
+        ``abort_in_flight`` frees the slot grid (batched mode: the
+        stacked-cache slots simply become garbage) and ``rebuild_request``
+        reconstructs decode state — full-attention KV, ring-buffer KV or
+        recurrent {conv, h}/{conv, ssd} — from the prompt + emitted
+        tokens on a survivor."""
         self.health[i].alive = False
         eng = self.engines[i]
         for req in eng.abort_in_flight():
-            new = req.tokens_out[req.prompt_carried:]   # emitted since last rebuild
-            if not new:                 # mid-prefill: nothing new to bake in
-                self.submit(req)
-                continue
-            # decode state is reconstructible: the clone's prompt is the
-            # current prompt + all-but-the-last NEW token; admission prefill
-            # regenerates that last token (greedy decode is deterministic),
-            # and retirement still fires at the ORIGINAL max_new_tokens
-            # since tokens_out carries over. ``prompt_carried`` records how
-            # many tokens_out entries the prompt now contains, so repeated
-            # failures never double-bake tokens.
-            re = Request(uid=req.uid,
-                         prompt=np.concatenate([req.prompt, np.asarray(new[:-1], np.int32)])
-                         if len(new) > 1 else req.prompt,
-                         max_new_tokens=req.max_new_tokens)
-            re.tokens_out = list(req.tokens_out[:-1])
-            re.prompt_carried = len(re.tokens_out)
-            self.requeued.append(re)
-            self.submit(re)
+            clone = rebuild_request(req)
+            if clone is not req:
+                self.requeued.append(clone)
+            self.submit(clone)
         # not-yet-admitted requests move to survivors unchanged
         for req in list(eng.queue):
             self.submit(req)

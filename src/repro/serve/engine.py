@@ -22,11 +22,28 @@ streams backed by ONE stacked, fixed-shape KV cache pytree. Each step:
    retirement are cache-slot writes, so nothing ever recompiles as traffic
    comes and goes.
 
-``batched=False`` (or a model without the stacked-cache API) falls back to
-the legacy slot-wise loop — kept as the benchmark baseline and for
-state-space/recurrent models. ``elastic.py`` handles replica failure by
-re-queueing in-flight requests (decode state is reconstructible from the
-prompt + emitted tokens).
+Every registry arch family runs the batched fast path over its own cache
+state:
+
+==============  ===========================  ==============================
+family          stacked state per slot       chunked prefill
+==============  ===========================  ==============================
+transformer     full-attention KV            fixed-shape padded chunks
+moe (MLA/GQA)   latent c_kv + rope key / KV  fixed-shape padded chunks
+griffin/hybrid  ring-buffer KV + {conv, h}   ring-aware (never clobbers
+                                             in-window entries)
+ssm (mamba2)    {conv, ssd state}            dt=0 passthrough padding
+==============  ===========================  ==============================
+
+Windowed/recurrent archs hold O(window)/O(1) state, so their admissible
+prompt length is NOT bounded by ``max_len`` (window-aware admission) and
+they never retire on a context limit. ``batched=False`` keeps the legacy
+slot-wise loop as the parity baseline; multi-codebook heads (musicgen)
+remain slot-wise. Decoding is greedy argmax by default; ``temperature`` /
+``top_k`` switch on (deterministic, seeded) sampling. ``elastic.py``
+handles replica failure by re-queueing in-flight requests (decode state —
+including recurrent state — is reconstructible from the prompt + emitted
+tokens).
 """
 from __future__ import annotations
 
@@ -71,11 +88,15 @@ class ServeConfig:
     crest_enabled: bool = False
     crest_every: int = 4          # run a BIST probe wave every N engine steps
     crest_cfg: crest.CrestConfig = dataclasses.field(default_factory=crest.CrestConfig)
-    greedy: bool = True
     batched: bool = True          # one jitted decode over the whole slot grid
-    prefill_chunk: int = 32       # chunked-prefill piece size (0 = whole prompt)
+    prefill_chunk: int = 32       # chunked-prefill piece size (0 = whole prompt;
+                                  # clamped to the ring length for windowed archs)
     token_budget: int = 0         # max prompt tokens admitted per step (0 = no cap;
                                   # enforced at chunk granularity)
+    temperature: float = 0.0      # <= 0: greedy argmax (the deterministic
+                                  # test path); > 0: seeded sampling
+    top_k: int = 0                # restrict sampling to the k best logits (0 = all)
+    sample_seed: int = 0          # sampling is deterministic given seed + call order
 
 
 @dataclasses.dataclass
@@ -105,20 +126,29 @@ class ServeEngine:
         self._retired: List[Request] = []
         self._rejected = 0
         self._staging: Optional[_Staging] = None
+        self._rng = np.random.default_rng(scfg.sample_seed)
 
-        # batched mode needs the stacked-cache API AND full attention (the
-        # chunked-prefill extend path has no ring-buffer support yet) AND
-        # flat logits (multi-codebook heads only work slot-wise for now)
+        # batched mode needs the stacked-cache API and flat logits
+        # (multi-codebook heads only work slot-wise for now); every other
+        # registry family — full/windowed attention, MLA, recurrent — runs
+        # the batched fast path over its own stacked state
         window = getattr(getattr(model, "attn_cfg", None), "window", 0)
         codebooks = getattr(getattr(model, "cfg", None), "n_codebooks", 0)
-        self.batched = (scfg.batched and window == 0 and not codebooks
+        self.batched = (scfg.batched and not codebooks
                         and all(hasattr(model, m) for m in _BATCHED_API))
+        # windowed/recurrent archs hold O(window)/O(1) state: prompt length
+        # is not bounded by the cache, and there is no context-limit retire
+        self.ctx_unbounded = bool(getattr(model, "unbounded_context", False))
         kv_dtype = ccfg.resolved_kv_dtype
         if self.batched:
             # round the cache length up to a chunk multiple so padded chunk
             # writes never clamp into (and clobber) valid cache entries
             c = scfg.prefill_chunk
             self._cache_len = (-(-scfg.max_len // c) * c) if c > 0 else scfg.max_len
+            # ring buffers hold exactly the window; a prefill chunk must fit
+            # inside the ring so within-chunk writes never collide (see
+            # layers.attn_apply)
+            self._chunk_cap = window
             self.cache = model.init_cache(scfg.max_batch, self._cache_len, dtype=kv_dtype)
             self.caches: List[Any] = []   # unused in batched mode
             self._decode_fn = jax.jit(
@@ -131,6 +161,7 @@ class ServeEngine:
             self._write_fn = jax.jit(model.write_cache, donate_argnums=(0,))
         else:
             self._cache_len = scfg.max_len
+            self._chunk_cap = 0
             self.cache = None
             self.caches = [None] * scfg.max_batch
             self._decode_fn = jax.jit(
@@ -154,12 +185,15 @@ class ServeEngine:
         self.queue.append(req)
 
     def _pop_admittable(self) -> Optional[Request]:
-        """Next queued request; un-servable prompts — empty, or too long for
-        the slot grid to hold with room for even one generated token — are
-        rejected, not crashed on / silently clobbered."""
+        """Next queued request; un-servable prompts — empty, or (for archs
+        whose cache grows with context) too long for the slot grid to hold
+        with room for even one generated token — are rejected, not crashed
+        on / silently clobbered. Windowed/recurrent archs hold O(window)
+        state, so no prompt is too long for them."""
         while self.queue:
             req = self.queue.popleft()
-            if 0 < len(req.prompt) < self.scfg.max_len:
+            if len(req.prompt) > 0 and (self.ctx_unbounded
+                                        or len(req.prompt) < self.scfg.max_len):
                 return req
             req.done = True
             req.finished_at = time.monotonic()
@@ -194,6 +228,8 @@ class ServeEngine:
             st = self._staging
             prompt = st.req.prompt
             chunk = self.scfg.prefill_chunk or len(prompt)
+            if self._chunk_cap:
+                chunk = min(chunk, self._chunk_cap)
             logits = None
             while st.consumed < len(prompt) and spent < budget:
                 n = min(chunk, len(prompt) - st.consumed)
@@ -205,7 +241,7 @@ class ServeEngine:
                 spent += n
             if st.consumed < len(prompt):
                 return                      # budget exhausted mid-prompt
-            nxt = int(jnp.argmax(logits[0, -1]))
+            nxt = self._pick(logits[0, -1])
             st.req.tokens_out.append(nxt)
             st.req.first_token_at = time.monotonic()
             self.cache = self._write_fn(self.cache, st.cache, jnp.int32(st.slot))
@@ -225,7 +261,7 @@ class ServeEngine:
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 logits, cache = self.model.prefill(
                     self.params, {"tokens": toks}, self.ccfg, max_len=self.scfg.max_len)
-                nxt = int(jnp.argmax(logits[0, -1]))
+                nxt = self._pick(logits[0, -1])
                 req.tokens_out.append(nxt)
                 req.first_token_at = time.monotonic()
                 self.slots[i] = req
@@ -243,6 +279,26 @@ class ServeEngine:
     def _active(self):
         return [i for i, r in enumerate(self.slots) if r is not None]
 
+    def _pick(self, row) -> int:
+        """Next token from a (V,) logits row (admission / slot-wise path).
+        Greedy argmax stays on-device; only sampling pulls logits to host."""
+        if self.scfg.temperature <= 0.0:
+            return int(jnp.argmax(row))
+        return int(self._sample_rows(np.asarray(row, np.float64)[None, :])[0])
+
+    def _sample_rows(self, x: np.ndarray) -> np.ndarray:
+        """(B, V) host logits -> (B,) temperature/top-k samples; one draw
+        per row, deterministic given ``sample_seed`` and draw order."""
+        x = x.astype(np.float64) / self.scfg.temperature
+        k = self.scfg.top_k
+        if 0 < k < x.shape[-1]:
+            kth = np.partition(x, -k, axis=-1)[:, -k][:, None]
+            x = np.where(x < kth, -np.inf, x)
+        x = x - x.max(axis=-1, keepdims=True)
+        p = np.exp(x)
+        p /= p.sum(axis=-1, keepdims=True)
+        return np.asarray([self._rng.choice(p.shape[-1], p=row) for row in p])
+
     def _retire_if_done(self, req: Request, i: int, nxt: int):
         # cache usage: prompt + tokens emitted since (carried ones are
         # already inside the prompt — failover clones)
@@ -250,7 +306,9 @@ class ServeEngine:
         if (len(req.tokens_out) >= req.max_new_tokens
                 or nxt == self.scfg.eos_id
                 # context limit: the next write would fall outside the cache
-                or used >= self.scfg.max_len):
+                # (never fires for windowed/recurrent archs — ring buffers
+                # wrap and recurrent state is O(1))
+                or (not self.ctx_unbounded and used >= self.scfg.max_len)):
             req.done = True
             req.finished_at = time.monotonic()
             self._retired.append(req)
@@ -263,7 +321,14 @@ class ServeEngine:
         for i in active:
             toks[i, 0] = self.slots[i].tokens_out[-1]
         logits, self.cache = self._decode_fn(self.params, jnp.asarray(toks), self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        if self.scfg.temperature <= 0.0:
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        else:
+            # sample ONLY the active rows: garbage slots must not consume
+            # RNG draws (results would depend on unrelated slot occupancy)
+            nxt = np.zeros(self.scfg.max_batch, np.int64)
+            host = np.asarray(logits[:, -1], np.float64)
+            nxt[active] = self._sample_rows(host[active])
         produced = 0
         for i in active:
             req = self.slots[i]
@@ -279,7 +344,7 @@ class ServeEngine:
             req = self.slots[i]
             tok = jnp.asarray([[req.tokens_out[-1]]], jnp.int32)
             logits, self.caches[i] = self._decode_fn(self.params, tok, self.caches[i])
-            nxt = int(jnp.argmax(logits[0, -1] if logits.ndim == 3 else logits[0, -1, 0]))
+            nxt = self._pick(logits[0, -1] if logits.ndim == 3 else logits[0, -1, 0])
             req.tokens_out.append(nxt)
             produced += 1
             self._retire_if_done(req, i, nxt)

@@ -2,9 +2,13 @@
 
 The batched path must be a pure optimization: token-exact against the
 slot-wise reference on every schedule (whole-prompt, chunked prefill,
-token-budget interleaving), with admission/retirement behaving as a FIFO
-slot grid and CREST probes still confirming injected faults.
+token-budget interleaving) for EVERY registry arch family — full-attention
+KV, MLA latent caches, ring-buffer + recurrent state, SSD state — with
+admission/retirement behaving as a FIFO slot grid and CREST probes still
+confirming injected faults.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,11 +23,21 @@ jax.config.update("jax_platform_name", "cpu")
 CCFG = CascadeConfig(mode="train", compute_dtype=jnp.float32)
 
 
-@pytest.fixture(scope="module")
-def tiny_model():
-    cfg, model = registry.load("codeqwen1.5-7b", smoke=True)
+def _load(arch):
+    cfg, model = registry.load(arch, smoke=True)
     params = model.init_params(jax.random.PRNGKey(0), CCFG)
     return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    return _load("codeqwen1.5-7b")
+
+
+@pytest.fixture(scope="module", params=sorted(registry.FAMILY_SMOKE), ids=str)
+def family_model(request):
+    """One smoke model per serving family (the CI arch-matrix axis)."""
+    return (request.param,) + _load(registry.FAMILY_SMOKE[request.param])
 
 
 def _requests(cfg, lens, max_new=4, seed=0):
@@ -87,6 +101,231 @@ def test_batched_decode_is_single_dispatch(tiny_model):
     eng.step()
     assert sum(s is not None for s in eng.slots) == 4
     assert len(calls) == 1, "batched step must issue one decode dispatch"
+
+
+# ---------------------------------------------------------------------------
+# per-family parity (transformer / moe / griffin / ssm)
+# ---------------------------------------------------------------------------
+
+def test_family_batched_equals_slotwise_token_exact(family_model):
+    """Every registry arch family decodes token-exact through the stacked
+    grid — MLA latent caches, ring buffers + recurrent state, SSD state."""
+    fam, cfg, model, params = family_model
+    lens = [2, 8, 5, 12, 20, 3]                 # incl. prompt < conv receptive field
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=False))
+    out, eng = _run(model, params, cfg, lens,
+                    ServeConfig(max_batch=2, max_len=64, batched=True,
+                                prefill_chunk=8))
+    assert eng.batched, f"{fam} must run the batched fast path"
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (fam, a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_family_budgeted_chunked_prefill_token_exact(family_model):
+    """Chunked prefill under a per-step token budget (prompts split across
+    engine steps, interleaved with decode) stays token-exact per family."""
+    fam, cfg, model, params = family_model
+    lens = [17, 8, 29, 4]
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=False))
+    out, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8, token_budget=8))
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (fam, a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_family_failover_clone_token_exact(family_model):
+    """Replica death mid-decode: the survivor rebuilds decode state — incl.
+    recurrent {conv, h}/{conv, ssd} state — from prompt + emitted tokens."""
+    from repro.serve.elastic import ReplicaSet
+    fam, cfg, model, params = family_model
+    ref, _ = _run(model, params, cfg, [8], ServeConfig(max_batch=1, max_len=64),
+                  max_new=8, seed=3)
+    scfg = ServeConfig(max_batch=1, max_len=64)
+    rs = ReplicaSet([ServeEngine(model, params, CCFG, scfg) for _ in range(2)])
+    victim = _requests(cfg, [8], max_new=8, seed=3)[0]
+    rs.submit(victim)
+    for _ in range(3):                         # prefill + a couple of decodes
+        rs.step()
+    killed_on = next(i for i, e in enumerate(rs.engines) if victim in e.slots)
+    rs.kill_replica(killed_on)
+    rs.drain(max_steps=200)
+    clone = rs.requeued[0]
+    assert clone.done
+    assert clone.tokens_out == ref[0].tokens_out, (fam, clone.tokens_out,
+                                                   ref[0].tokens_out)
+
+
+def test_moe_parity_under_expert_capacity_pressure():
+    """Many concurrent slots routing into few experts: serving dispatch is
+    drop-free, so a token's experts never depend on unrelated slot contents
+    or chunk boundaries — batched stays token-exact at large batch too
+    (with capacity drops, requests diverged at max_batch=12)."""
+    cfg, model, params = _load(registry.FAMILY_SMOKE["moe"])
+    lens = [8] * 12
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=12, max_len=64, batched=False),
+                  max_new=6, max_steps=600)
+    out, eng = _run(model, params, cfg, lens,
+                    ServeConfig(max_batch=12, max_len=64, batched=True,
+                                prefill_chunk=8), max_new=6, max_steps=600)
+    assert eng.batched
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (a.uid, a.tokens_out, b.tokens_out)
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer edge cases (griffin: windowed attention + recurrent state)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def griffin_w8():
+    """Griffin with a tiny window so prompts overrun the ring quickly."""
+    cfg, model = registry.load("recurrentgemma-2b", smoke=True)
+    cfg = dataclasses.replace(cfg, window=8)
+    model = registry.build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    return cfg, model, params
+
+
+def test_griffin_prompt_longer_than_window_token_exact(griffin_w8):
+    """Prompts several times the attention window chunk-prefill through the
+    ring without clobbering in-window entries."""
+    cfg, model, params = griffin_w8
+    lens = [23, 40, 9]                          # all beyond window=8
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=False))
+    out, eng = _run(model, params, cfg, lens,
+                    ServeConfig(max_batch=2, max_len=64, batched=True,
+                                prefill_chunk=4))
+    assert eng.batched
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_griffin_chunk_boundary_on_ring_wrap_token_exact(griffin_w8):
+    """Chunk == ring length: every chunk boundary lands exactly on the ring
+    wrap (the hardest alignment for the drop-scatter write path)."""
+    cfg, model, params = griffin_w8
+    lens = [16, 24, 17, 8]                      # multiples of window=8 + one off
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=False))
+    out, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8))
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_griffin_oversized_chunk_clamped_to_ring(griffin_w8):
+    """prefill_chunk larger than the ring is clamped (a chunk must fit the
+    ring so within-chunk writes never collide) — still token-exact."""
+    cfg, model, params = griffin_w8
+    ref, _ = _run(model, params, cfg, [20],
+                  ServeConfig(max_batch=1, max_len=64, batched=False))
+    out, eng = _run(model, params, cfg, [20],
+                    ServeConfig(max_batch=1, max_len=64, batched=True,
+                                prefill_chunk=32))
+    assert eng._chunk_cap == 8
+    assert ref[0].tokens_out == out[0].tokens_out
+
+
+def test_griffin_window_larger_than_max_len_token_exact():
+    """window > max_len: the ring must still hold the FULL window (state is
+    O(window), not O(max_len)) — batched chunk-prefill may not silently
+    truncate attention relative to the slot-wise whole-prompt baseline."""
+    cfg, model = registry.load("recurrentgemma-2b", smoke=True)   # window=16
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    lens = [20, 30, 10]                          # beyond max_len, around window
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=12, batched=False))
+    out, eng = _run(model, params, cfg, lens,
+                    ServeConfig(max_batch=2, max_len=12, batched=True,
+                                prefill_chunk=8))
+    assert eng.batched
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_window_aware_admission_not_spuriously_rejected(griffin_w8):
+    """Windowed/recurrent archs hold O(window) state: prompts longer than
+    ``max_len`` must be admitted (and never context-limit retired), while
+    full-attention archs still reject them."""
+    cfg, model, params = griffin_w8
+    for batched in (True, False):
+        reqs, eng = _run(model, params, cfg, [30, 70],
+                         ServeConfig(max_batch=2, max_len=16, batched=batched,
+                                     prefill_chunk=8), max_new=5)
+        assert all(r.done and len(r.tokens_out) == 5 for r in reqs), (
+            batched, [r.tokens_out for r in reqs])
+        assert eng.metrics()["requests_rejected"] == 0
+
+    # ssm likewise has no context limit
+    cfg_s, model_s, params_s = _load("mamba2-370m")
+    reqs, eng = _run(model_s, params_s, cfg_s, [30],
+                     ServeConfig(max_batch=1, max_len=16, batched=True,
+                                 prefill_chunk=8), max_new=5)
+    assert reqs[0].done and len(reqs[0].tokens_out) == 5
+    assert eng.metrics()["requests_rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# sampling (temperature / top-k)
+# ---------------------------------------------------------------------------
+
+def test_sampling_topk1_matches_greedy_batched_and_slotwise(tiny_model):
+    """top_k=1 collapses sampling to argmax: token-exact with the greedy
+    default in both engine modes (so sampling never perturbs the fast path)."""
+    cfg, model, params = tiny_model
+    lens = [8, 5, 12]
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8))
+    for batched in (True, False):
+        out, _ = _run(model, params, cfg, lens,
+                      ServeConfig(max_batch=2, max_len=64, batched=batched,
+                                  prefill_chunk=8, temperature=0.8, top_k=1))
+        for a, b in zip(ref, out):
+            assert a.tokens_out == b.tokens_out, (batched, a.uid)
+
+
+def test_sampling_failover_never_rewrites_emitted_tokens(tiny_model):
+    """Failover under temperature sampling: the rebuild carries EVERY
+    emitted token in the clone's prompt, so a re-draw on the survivor can
+    never rewrite history the client already received."""
+    from repro.serve.elastic import ReplicaSet
+    cfg, model, params = tiny_model
+    scfg = ServeConfig(max_batch=1, max_len=64, temperature=1.0, top_k=8,
+                       sample_seed=11)
+    rs = ReplicaSet([ServeEngine(model, params, CCFG, scfg) for _ in range(2)])
+    victim = _requests(cfg, [8], max_new=10, seed=3)[0]
+    rs.submit(victim)
+    for _ in range(4):                         # prefill + a few decodes
+        rs.step()
+    emitted = list(victim.tokens_out)
+    assert len(emitted) >= 2
+    killed_on = next(i for i, e in enumerate(rs.engines) if victim in e.slots)
+    rs.kill_replica(killed_on)
+    rs.drain(max_steps=200)
+    clone = rs.requeued[0]
+    assert clone.done and len(clone.tokens_out) == 10
+    assert clone.tokens_out[:len(emitted)] == emitted, (
+        clone.tokens_out, emitted)
+
+
+def test_sampling_deterministic_given_seed(tiny_model):
+    """Same seed + same schedule => identical samples; tokens stay in-vocab
+    and within the top-k support."""
+    cfg, model, params = tiny_model
+    scfg = ServeConfig(max_batch=2, max_len=64, batched=True, prefill_chunk=8,
+                       temperature=1.0, top_k=5, sample_seed=7)
+    a, _ = _run(model, params, cfg, [8, 5], scfg, max_new=6)
+    b, _ = _run(model, params, cfg, [8, 5], scfg, max_new=6)
+    for ra, rb in zip(a, b):
+        assert ra.tokens_out == rb.tokens_out
+        assert all(0 <= t < cfg.vocab for t in ra.tokens_out)
 
 
 # ---------------------------------------------------------------------------
@@ -285,10 +524,11 @@ def test_kv_dtype_plumbs_into_stacked_cache(tiny_model):
     assert cache["layers"]["k"].dtype == jnp.float8_e4m3fn
 
 
-def test_cache_slot_roundtrip(tiny_model):
+def test_cache_slot_roundtrip(family_model):
     """write_cache(cache_at(...)) is the failover handoff primitive: a slot
-    written into a stacked grid reads back bit-identical."""
-    cfg, model, params = tiny_model
+    written into a stacked grid reads back bit-identical — for every cache
+    family (probe-discovered slot axes, incl. Python-list sub-caches)."""
+    fam, cfg, model, params = family_model
     toks = jnp.asarray(np.arange(8)[None, :], jnp.int32)
     _, sub = model.prefill(params, {"tokens": toks}, CCFG, max_len=16)
     stacked = model.init_cache(4, 16, dtype=jnp.float32)
@@ -302,10 +542,10 @@ def test_cache_slot_roundtrip(tiny_model):
         np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
 
 
-def test_prefill_extend_matches_prefill(tiny_model):
+def test_prefill_extend_matches_prefill(family_model):
     """Chunked extend over a fresh cache == one-shot prefill (logits of the
-    last prompt token and the written K/V both match)."""
-    cfg, model, params = tiny_model
+    last prompt token match; KV families also write identical positions)."""
+    fam, cfg, model, params = family_model
     prompt = np.arange(11, dtype=np.int32) % cfg.vocab
     logits_p, cache_p = model.prefill(
         params, {"tokens": jnp.asarray(prompt[None, :])}, CCFG, max_len=16)
@@ -318,7 +558,10 @@ def test_prefill_extend_matches_prefill(tiny_model):
         logits_e, cache = model.prefill_extend(
             params, {"tokens": jnp.asarray(toks)}, cache, CCFG,
             n_valid=jnp.int32(len(piece)))
+    # recurrent scans reassociate across chunk boundaries -> fp-level slack
+    tol = 1e-5 if fam in ("transformer", "moe") else 1e-4
     np.testing.assert_allclose(np.asarray(logits_e), np.asarray(logits_p),
-                               atol=1e-5, rtol=1e-5)
-    np.testing.assert_array_equal(np.asarray(cache["layers"]["pos"]),
-                                  np.asarray(cache_p["layers"]["pos"]))
+                               atol=tol, rtol=tol)
+    if fam == "transformer":
+        np.testing.assert_array_equal(np.asarray(cache["layers"]["pos"]),
+                                      np.asarray(cache_p["layers"]["pos"]))
