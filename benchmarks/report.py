@@ -44,7 +44,9 @@ def main():
               f"| {o.get('dominant','—')} | {t.get('compute','—')} | {t.get('memory','—')} "
               f"| {t.get('collective','—')} | {peak:.1f} | {o.get('useful_flops_ratio','—')} |")
 
-    # serving: batched vs slot-wise continuous-batching decode, per family
+    # serving: batched vs slot-wise continuous-batching decode (+ spec), per
+    # family. Loading is schema-tolerant: rows from earlier PRs may lack the
+    # spec columns (or even max_batch/mode) and must still render.
     serving_path = next((p for p in ("results/bench_serving.json",
                                      "results/serving.json")
                          if os.path.exists(p)), None)
@@ -52,18 +54,24 @@ def main():
         rows = json.load(open(serving_path))
         print("\n## Serving decode throughput (benchmarks/serving.py)\n")
         print("| family | batch | slotwise tok/s | batched tok/s | speedup "
-              "| batched p99 step ms |")
-        print("|" + "---|" * 6)
+              "| batched p99 step ms | spec tok/s | accepted/step | spec vs batched |")
+        print("|" + "---|" * 9)
         by_key = {}
         for r in rows:
-            key = (r.get("family", r.get("arch", "?")), r["max_batch"])
-            by_key.setdefault(key, {})[r["mode"]] = r
-        for fam, b in sorted(by_key):
+            key = (r.get("family", r.get("arch", "?")), r.get("max_batch", "?"))
+            by_key.setdefault(key, {})[r.get("mode", "?")] = r
+        # numeric batches sort numerically; legacy rows without max_batch
+        # (non-int placeholder) sort after them
+        for fam, b in sorted(by_key, key=lambda t: (
+                str(t[0]), (0, t[1]) if isinstance(t[1], int) else (1, str(t[1])))):
             s = by_key[(fam, b)].get("slotwise", {})
             k = by_key[(fam, b)].get("batched", {})
+            p = by_key[(fam, b)].get("spec", {})
             print(f"| {fam} | {b} | {s.get('tokens_per_s','—')} "
                   f"| {k.get('tokens_per_s','—')} "
-                  f"| {k.get('speedup_vs_slotwise','—')}x | {k.get('step_ms_p99','—')} |")
+                  f"| {k.get('speedup_vs_slotwise','—')}x | {k.get('step_ms_p99','—')} "
+                  f"| {p.get('tokens_per_s','—')} | {p.get('accepted_per_step','—')} "
+                  f"| {p.get('speedup_vs_batched','—')}x |")
 
     # CASCADE invariant check: forward graphs with zero all-reduce bytes
     print("\n## CASCADE zero-partial-sum invariant (faithful preset)\n")

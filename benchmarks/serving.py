@@ -10,7 +10,15 @@ sizes, in both engine modes:
 * ``batched``  — the stacked-cache grid: ONE donated, jitted ``decode_step``
   over all slots per engine step (weight streaming paid once — the paper's
   Table 9/10 batching balance). Every family runs it over its own state:
-  full KV, MLA latents, ring buffers + recurrent {conv, h}, SSD state.
+  full KV, MLA latents, ring buffers + recurrent {conv, h}, SSD state;
+* ``spec`` (``--spec``) — speculative decode on the batched grid: prompt-
+  lookup drafts + ONE verify pass per step, on a **repetitive-text
+  workload** (the output head is zeroed so greedy argmax is a constant
+  token — the acceptance CEILING: it isolates the engine's draft/verify/
+  rewind mechanics from model quality, which for these random-init smoke
+  nets would otherwise make acceptance an accident of the seed; the
+  tests/test_spec.py parity suite guarantees correctness on arbitrary
+  streams). Rows add ``accepted_per_step`` and ``speedup_vs_batched``.
 
 Emits one JSON row per (arch, mode, batch) into ``--out`` in the same row
 style the roofline sweeps use (``arch``/``shape``/``status`` keys), so
@@ -18,11 +26,14 @@ style the roofline sweeps use (``arch``/``shape``/``status`` keys), so
 
 ``--min-speedup X`` turns the run into a REGRESSION GATE: exit non-zero if
 batched throughput is below X times slot-wise for any covered arch/batch
-(CI runs this at 1.5x and uploads the JSON as a workflow artifact).
+(CI runs this at 1.5x and uploads the JSON as a workflow artifact);
+``--min-accept Y`` gates spec rows at >= Y accepted draft tokens per
+(slot, step) (CI runs this at 1.0).
 
 Run: PYTHONPATH=src:. python -m benchmarks.serving \
         [--archs transformer moe griffin ssm] [--batches 2]
-        [--min-speedup 1.5] [--out results/bench_serving.json]
+        [--min-speedup 1.5] [--spec] [--draft-len 4] [--min-accept 1.0]
+        [--out results/bench_serving.json]
 """
 from __future__ import annotations
 
@@ -57,7 +68,26 @@ REPEATS = 3       # best-of-N throughput per mode: one noisy-neighbor burst
                   # on a shared CI runner must not fail the gate
 
 
-def build_engine(family: str, batched: bool, max_batch: int):
+def _force_constant_argmax(params: dict) -> dict:
+    """Zero the output head (tied archs: the embedding table) so greedy
+    argmax emits one constant token forever — a maximally repetitive
+    stream, i.e. the spec-decode acceptance ceiling."""
+    p = dict(params)
+    key = "lm_head" if "lm_head" in p else "embed"
+    p[key] = jax.tree.map(jnp.zeros_like, p[key])
+    return p
+
+
+#: cache length for the spec comparison: speculation commits up to
+#: draft_len+1 tokens per slot per step, so bounded-context archs need a
+#: longer grid to not context-retire mid-measurement; the batched baseline
+#: that spec is compared against runs at the SAME length so the speedup
+#: column is apples-to-apples (attention cost grows with the cache)
+SPEC_MAX_LEN = 1024
+
+
+def build_engine(family: str, mode: str, max_batch: int, draft_len: int = 4,
+                 max_len: int = 128):
     from repro.core.cascade import CascadeConfig
     from repro.models import registry
     from repro.serve.engine import ServeConfig, ServeEngine
@@ -68,23 +98,31 @@ def build_engine(family: str, batched: bool, max_batch: int):
     model = registry.build_model(cfg)
     ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
     params = model.init_params(jax.random.PRNGKey(0), ccfg)
-    scfg = ServeConfig(max_batch=max_batch, max_len=128, batched=batched,
-                       prefill_chunk=PROMPT_LEN)
+    if mode == "spec":
+        params = _force_constant_argmax(params)
+    scfg = ServeConfig(max_batch=max_batch, max_len=max_len,
+                       batched=(mode != "slotwise"), prefill_chunk=PROMPT_LEN,
+                       draft_len=(draft_len if mode == "spec" else 0))
     return cfg, ServeEngine(model, params, ccfg, scfg)
 
 
-def bench_mode(family: str, batched: bool, max_batch: int) -> dict:
+def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
+               max_len: int = 128) -> dict:
     from repro.serve.engine import Request
 
-    cfg, eng = build_engine(family, batched, max_batch)
+    cfg, eng = build_engine(family, mode, max_batch, draft_len, max_len)
     rng = np.random.default_rng(0)
+    pat = rng.integers(0, cfg.vocab, 4).astype(np.int32)
     for i in range(max_batch):
-        eng.submit(Request(uid=i,
-                           prompt=rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
-                           max_new_tokens=10_000))  # never retire during run
+        prompt = (np.tile(pat, PROMPT_LEN // 4) if mode == "spec"   # repetitive text
+                  else rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32))
+        eng.submit(Request(uid=i, prompt=prompt,
+                           max_new_tokens=1_000_000))  # never retire during run
     for _ in range(1 + WARMUP_STEPS):       # admit-all step + jit warmup
         eng.step()
     assert all(s is not None for s in eng.slots)
+    if mode == "spec":
+        assert eng.spec, "spec bench must take the speculative path"
     eng.step_times.clear()                  # drop trace/compile steps from p50/p99
     best_dt, produced = float("inf"), 0
     for _ in range(REPEATS):                # best-of-N: robust to CPU bursts
@@ -97,11 +135,11 @@ def bench_mode(family: str, batched: bool, max_batch: int) -> dict:
             best_dt, produced = dt, rep
     dt = best_dt
     m = eng.metrics()
-    return {
+    row = {
         "arch": cfg.name,
         "family": family,
         "shape": f"serve_decode_b{max_batch}",
-        "mode": "batched" if batched else "slotwise",
+        "mode": mode,
         "status": "ok",
         "max_batch": max_batch,
         "decode_tokens": produced,
@@ -110,6 +148,10 @@ def bench_mode(family: str, batched: bool, max_batch: int) -> dict:
         "step_ms_p50": round(m["step_time_p50_s"] * 1e3, 2),
         "step_ms_p99": round(m["step_time_p99_s"] * 1e3, 2),
     }
+    if mode == "spec":
+        row["draft_len"] = m["draft_len"]
+        row["accepted_per_step"] = round(m["accepted_per_step"], 2)
+    return row
 
 
 def main():
@@ -124,13 +166,21 @@ def main():
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail (exit 1) if batched/slotwise throughput falls "
                          "below this for any covered arch (0 = report only)")
+    ap.add_argument("--spec", action="store_true",
+                    help="also bench speculative decode (repetitive-text "
+                         "acceptance-ceiling workload)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="drafted tokens per slot per step for --spec")
+    ap.add_argument("--min-accept", type=float, default=0.0,
+                    help="fail (exit 1) if the spec bench accepts fewer "
+                         "drafted tokens per (slot, step) than this")
     args = ap.parse_args()
 
     rows, failures = [], []
     for family in args.archs:
         for b in args.batches:
-            slot = bench_mode(family, batched=False, max_batch=b)
-            bat = bench_mode(family, batched=True, max_batch=b)
+            slot = bench_mode(family, "slotwise", b)
+            bat = bench_mode(family, "batched", b)
             speedup = bat["tokens_per_s"] / max(slot["tokens_per_s"], 1e-9)
             bat["speedup_vs_slotwise"] = slot["speedup_vs_slotwise"] = round(speedup, 2)
             rows += [slot, bat]
@@ -141,6 +191,22 @@ def main():
             if args.min_speedup > 0 and speedup < args.min_speedup:
                 failures.append(f"{family} b={b}: {speedup:.2f}x "
                                 f"< {args.min_speedup:.2f}x")
+            if args.spec:
+                sp = bench_mode(family, "spec", b, args.draft_len,
+                                max_len=SPEC_MAX_LEN)
+                # same-cache-size batched baseline: isolates the speculative
+                # gain from the longer grid's attention cost
+                bat_ref = bench_mode(family, "batched", b, max_len=SPEC_MAX_LEN)
+                sp["speedup_vs_batched"] = round(
+                    sp["tokens_per_s"] / max(bat_ref["tokens_per_s"], 1e-9), 2)
+                rows.append(sp)
+                print(f"{'':12s}       spec     {sp['tokens_per_s']:9.1f} tok/s   "
+                      f"accepted/step {sp['accepted_per_step']:.2f}   "
+                      f"vs batched {sp['speedup_vs_batched']:5.2f}x")
+                if args.min_accept > 0 and sp["accepted_per_step"] < args.min_accept:
+                    failures.append(
+                        f"{family} b={b}: spec accepted/step "
+                        f"{sp['accepted_per_step']:.2f} < {args.min_accept:.2f}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -30,6 +30,11 @@ def main():
                     help="> 0 enables seeded sampling (default: greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the k best logits (0 = all)")
+    ap.add_argument("--draft-len", type=int, default=0,
+                    help="speculative decode: K drafted tokens per slot per "
+                         "step (0 = off; greedy only)")
+    ap.add_argument("--ngram-max", type=int, default=3,
+                    help="longest suffix n-gram the prompt-lookup drafter matches")
     args = ap.parse_args()
 
     import jax
@@ -45,7 +50,8 @@ def main():
 
     scfg = ServeConfig(max_batch=args.max_batch,
                        max_len=args.prompt_len + args.max_new + 1,
-                       temperature=args.temperature, top_k=args.top_k)
+                       temperature=args.temperature, top_k=args.top_k,
+                       draft_len=args.draft_len, ngram_max=args.ngram_max)
     eng = ServeEngine(model, params, ccfg, scfg)
 
     rng = np.random.default_rng(0)
@@ -62,9 +68,11 @@ def main():
         total += eng.step()
     dt = time.time() - t0
     m = eng.metrics()
+    spec = (f", spec draft_len={m['draft_len']} "
+            f"accepted/step={m['accepted_per_step']:.2f}" if m["spec"] else "")
     print(f"served {args.requests} requests, {total} tokens in {dt:.2f}s "
           f"({total / max(dt, 1e-9):.1f} tok/s), p99 step {eng.straggler_p99()*1e3:.1f} ms, "
-          f"batched={m['batched']}, admission wait {m['admission_wait_s_mean']*1e3:.1f} ms")
+          f"batched={m['batched']}{spec}, admission wait {m['admission_wait_s_mean']*1e3:.1f} ms")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.tokens_out}")
 

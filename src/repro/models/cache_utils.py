@@ -79,6 +79,113 @@ def take_last_valid(x: jax.Array, n_valid) -> jax.Array:
     return jax.vmap(lambda xi, j: lax.dynamic_slice_in_dim(xi, j, 1, axis=0))(x, last)
 
 
+# ---------------------------------------------------------------------------
+# speculative-decode rewind primitives
+#
+# A verify pass runs the fixed-shape ``prefill_extend`` path over a
+# ``(B, 1+K)`` draft chunk with every token treated as real; acceptance is
+# only known afterwards, so the cache writes for the rejected suffix must be
+# rolled back per slot. Two leaf families, two mechanisms:
+#
+# * **seq-indexed buffers** (full/windowed KV, MLA latents, ring
+#   ``slot_pos``): snapshot the rows the chunk will overwrite BEFORE the
+#   verify pass, then restore the rejected rows and rewind the per-slot
+#   position. Dense caches only strictly need the position rewind (stale
+#   rows above ``pos`` are mask-invalid), but ring buffers lose clobbered
+#   in-window entries without the row restore, so both get it.
+# * **recurrent state** (conv / RG-LRU h / SSD): recurrences cannot be
+#   rewound in place, so the verify pass emits per-position checkpoints and
+#   the rewind selects checkpoint ``keep[b]`` per slot
+#   (``slice_rows_per_slot``).
+# ---------------------------------------------------------------------------
+
+
+def seq_rows_snapshot(cache: dict, s: int) -> dict:
+    """Snapshot the ``s`` rows an extend of length ``s`` will write.
+
+    ``cache`` is one attention-cache dict: a per-slot position table
+    ``pos`` with shape ``(lead..., B)`` plus seq-indexed buffers whose row
+    axis is axis ``pos.ndim`` (``k``/``v``/``c_kv``/``k_rope`` of shape
+    ``(lead..., B, T, ...)``; ring ``slot_pos`` of ``(lead..., B, T)``).
+    Ring caches — identified by a ``slot_pos`` leaf — write at
+    ``(pos + j) % T``; linear caches at ``pos + j`` (the engine guarantees
+    ``pos + s <= T`` headroom).
+    """
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    ring = "slot_pos" in cache
+    rows = pos[..., None] + jnp.arange(s, dtype=jnp.int32)   # (lead..., B, s)
+    snap = {"pos": pos}
+    for name, buf in cache.items():
+        if name == "pos":
+            continue
+        t = buf.shape[pos.ndim]
+        idx = rows % t if ring else jnp.minimum(rows, t - 1)
+        ix = idx.reshape(idx.shape + (1,) * (buf.ndim - pos.ndim - 1))
+        snap[name] = jnp.take_along_axis(buf, ix, axis=pos.ndim)
+    return snap
+
+
+def _scatter_rows(buf: jax.Array, idx: jax.Array, val: jax.Array, axis: int) -> jax.Array:
+    """Write ``val`` rows into ``buf`` at per-lead-row indices ``idx``.
+
+    buf: (lead..., T, rest); idx: (lead..., s); val: (lead..., s, rest).
+    """
+    lead = buf.shape[:axis]
+    n = 1
+    for d in lead:
+        n *= d
+    s = idx.shape[-1]
+    buf2 = buf.reshape((n,) + buf.shape[axis:])
+    idx2 = idx.reshape(n, s)
+    val2 = val.reshape((n, s) + buf.shape[axis + 1:])
+    out = jax.vmap(lambda b, i, v: b.at[i].set(v))(buf2, idx2, val2)
+    return out.reshape(buf.shape)
+
+
+def seq_rows_restore(cache: dict, snap: dict, keep) -> dict:
+    """Rewind a seq-indexed cache after a verify pass.
+
+    The first ``keep[b]`` chunk rows stay committed; rows ``keep[b]..s-1``
+    are restored from the snapshot and the per-slot position is rewound to
+    ``pos0 + keep[b]``. ``keep`` is ``(B,)`` (0 for inactive slots — a full
+    rewind is the identity on the pre-verify cache).
+    """
+    pos0 = snap["pos"]
+    keep_f = jnp.broadcast_to(jnp.asarray(keep, jnp.int32), pos0.shape)
+    ring = "slot_pos" in cache
+    any_buf = next(k for k in snap if k != "pos")
+    s = snap[any_buf].shape[pos0.ndim]
+    rows = pos0[..., None] + jnp.arange(s, dtype=jnp.int32)  # (lead..., B, s)
+    rejected = jnp.arange(s, dtype=jnp.int32) >= keep_f[..., None]
+    new = {"pos": pos0 + keep_f}
+    for name, buf in cache.items():
+        if name == "pos":
+            continue
+        t = buf.shape[pos0.ndim]
+        idx = rows % t if ring else jnp.minimum(rows, t - 1)
+        ix = idx.reshape(idx.shape + (1,) * (buf.ndim - pos0.ndim - 1))
+        cur = jnp.take_along_axis(buf, ix, axis=pos0.ndim)
+        mask = rejected.reshape(rejected.shape + (1,) * (buf.ndim - pos0.ndim - 1))
+        new[name] = _scatter_rows(buf, idx, jnp.where(mask, snap[name], cur),
+                                  axis=pos0.ndim)
+    return new
+
+
+def slice_rows_per_slot(ck: jax.Array, keep, b_axis: int, n: int) -> jax.Array:
+    """Per-slot contiguous row slice from a checkpoint stack.
+
+    ck: (lead..., B, C, rest...) with ``b_axis`` the B axis; returns rows
+    ``keep[b] .. keep[b]+n-1`` along axis ``b_axis + 1`` — the recurrent
+    rewind primitive (conv windows: n = width-1; scalar states: n = 1).
+    """
+    k = jnp.asarray(keep, jnp.int32)
+    t_axis = b_axis + 1
+    idx = k.reshape((1,) * b_axis + (k.shape[0],) + (1,) * (ck.ndim - b_axis - 1))
+    idx = idx + jnp.arange(n, dtype=jnp.int32).reshape(
+        (1,) * t_axis + (n,) + (1,) * (ck.ndim - t_axis - 1))
+    return jnp.take_along_axis(ck, idx, axis=t_axis)
+
+
 class StackedCacheMixin:
     """Stacked-cache protocol shared by every registry model.
 

@@ -25,7 +25,9 @@ def _remat_policy(name: str):
         "none": _jax.checkpoint_policies.nothing_saveable,
         "save_all": _jax.checkpoint_policies.everything_saveable,
     }[name]
-from repro.models.cache_utils import StackedCacheMixin, take_last_valid
+from repro.models.cache_utils import (StackedCacheMixin, seq_rows_restore,
+                                      seq_rows_snapshot, slice_rows_per_slot,
+                                      take_last_valid)
 from repro.models.ssm import _causal_conv, _conv_decode, _conv_extend, conv_prefill_state
 
 _C = 8.0  # RG-LRU gate sharpness constant (Griffin paper)
@@ -102,7 +104,9 @@ class GriffinLM(StackedCacheMixin):
 
     # --------------------------------------------------------------- RG-LRU
     def _rglru(self, lp, y, ccfg, h0=None, mode="full", n_valid=None):
-        """y: (b, s, lru) post-conv input. Returns (out, h_last). In
+        """y: (b, s, lru) post-conv input. Returns (out, h_last, h_all) with
+        ``h_all`` the f32 state after EVERY step, (b, s, lru) — the
+        speculative-rewind checkpoint stack (None in decode mode). In
         ``extend`` mode only the first ``n_valid`` steps are real: pad steps
         are forced to the identity recurrence (a=1, input=0) so the carried
         state lands exactly on the n_valid boundary."""
@@ -113,7 +117,7 @@ class GriffinLM(StackedCacheMixin):
             a = jnp.exp(log_a)
             gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * y.astype(jnp.float32))
             h = a[:, 0] * h0 + gated[:, 0]
-            return h[:, None].astype(y.dtype), h
+            return h[:, None].astype(y.dtype), h, None
         if n_valid is not None:
             m = (jnp.arange(y.shape[1]) < n_valid)[None, :, None]
             log_a = jnp.where(m, log_a, 0.0)                # pad: a = exp(0) = 1
@@ -129,51 +133,74 @@ class GriffinLM(StackedCacheMixin):
         aa, hh = lax.associative_scan(combine, (a, gated), axis=1)
         if h0 is not None:
             hh = hh + aa * h0[:, None]
-        return hh.astype(y.dtype), hh[:, -1]
+        return hh.astype(y.dtype), hh[:, -1], hh
 
-    def _rblock(self, lp, x, ccfg, cache=None, mode="full", n_valid=None):
+    def _rblock(self, lp, x, ccfg, cache=None, mode="full", n_valid=None,
+                collect: bool = False):
         cfg = self.cfg
+        ckpt = None
         u = L.norm_apply(lp["ln"], x, cfg.norm_type)
         gate = jax.nn.gelu(cascade.linear_apply(lp["w_gate"], u, ccfg).astype(jnp.float32))
         y = cascade.linear_apply(lp["w_in"], u, ccfg)
         if mode == "decode":
             y_c, new_conv = _conv_decode(y, cache["conv"], lp["conv_w"], lp["conv_b"])
-            out, h_last = self._rglru(lp, y_c, ccfg, cache["h"], mode)
+            out, h_last, _ = self._rglru(lp, y_c, ccfg, cache["h"], mode)
             new_cache = {"conv": new_conv, "h": h_last}
         elif mode == "extend":
-            y_c, new_conv = _conv_extend(y, cache["conv"], lp["conv_w"],
-                                         lp["conv_b"], n_valid)
-            out, h_last = self._rglru(lp, y_c, ccfg, cache["h"], mode, n_valid)
+            y_c, new_conv, conv_full = _conv_extend(y, cache["conv"], lp["conv_w"],
+                                                    lp["conv_b"], n_valid)
+            out, h_last, h_all = self._rglru(lp, y_c, ccfg, cache["h"], mode, n_valid)
             new_cache = {"conv": new_conv, "h": h_last}
+            if collect:
+                # checkpoint stacks: state after j chunk tokens is
+                # conv_full[:, j:j+w-1] / h[:, j] (index 0 = pre-chunk state)
+                ckpt = {"conv": conv_full,
+                        "h": jnp.concatenate([cache["h"][:, None], h_all], axis=1)}
         else:
             y_c = _causal_conv(y, lp["conv_w"], lp["conv_b"])
-            out, h_last = self._rglru(lp, y_c, ccfg, None, mode)
+            out, h_last, _ = self._rglru(lp, y_c, ccfg, None, mode)
             new_cache = ({"conv": conv_prefill_state(y, cfg.conv_width), "h": h_last}
                          if mode == "prefill" else None)
         mixed = cascade.linear_apply(lp["w_out"], (out.astype(jnp.float32) * gate).astype(x.dtype), ccfg)
         x = x + mixed
         x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type), cfg.mlp_kind, ccfg)
-        return constrain_residual(x), new_cache
+        x = constrain_residual(x)
+        if collect:
+            return x, new_cache, ckpt
+        return x, new_cache
 
-    def _ablock(self, lp, x, ccfg, cache=None, mode="full", max_len=None, n_valid=None):
+    def _ablock(self, lp, x, ccfg, cache=None, mode="full", max_len=None, n_valid=None,
+                collect: bool = False):
         cfg = self.cfg
+        # the rewind checkpoint for a ring-KV block is the set of rows the
+        # chunk will overwrite — snapshot BEFORE the write
+        ckpt = seq_rows_snapshot(cache, x.shape[1]) if collect else None
         h, nc = L.attn_apply(lp["attn"], L.norm_apply(lp["ln"], x, cfg.norm_type),
                              self.attn_cfg, ccfg, cache=cache, mode=mode, max_len=max_len,
                              n_valid=n_valid)
         x = x + h
         x = x + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], x, cfg.norm_type), cfg.mlp_kind, ccfg)
-        return constrain_residual(x), nc
+        x = constrain_residual(x)
+        if collect:
+            return x, nc, ckpt
+        return x, nc
 
     def _group_apply(self, gp, x, ccfg, gcache=None, mode="full", max_len=None,
-                     n_valid=None):
-        new_cache = {}
+                     n_valid=None, collect: bool = False):
+        new_cache, ckpts = {}, {}
         for i, kind in enumerate(self.group):
             c = gcache[f"b{i}"] if gcache is not None else None
             if kind == "R":
-                x, nc = self._rblock(gp[f"b{i}"], x, ccfg, c, mode, n_valid)
+                r = self._rblock(gp[f"b{i}"], x, ccfg, c, mode, n_valid, collect)
             else:
-                x, nc = self._ablock(gp[f"b{i}"], x, ccfg, c, mode, max_len, n_valid)
-            new_cache[f"b{i}"] = nc
+                r = self._ablock(gp[f"b{i}"], x, ccfg, c, mode, max_len, n_valid,
+                                 collect)
+            if collect:
+                x, new_cache[f"b{i}"], ckpts[f"b{i}"] = r
+            else:
+                x, new_cache[f"b{i}"] = r
+        if collect:
+            return x, new_cache, ckpts
         return x, new_cache
 
     # --------------------------------------------------------------- api
@@ -270,3 +297,49 @@ class GriffinLM(StackedCacheMixin):
             new_tail.append(nc)
         logits = self._head(params, take_last_valid(x, nv), ccfg)
         return logits, {"groups": new_g, "tail": new_tail}
+
+    # --------------------------------------------------- speculative decode
+    def spec_verify(self, params, batch, cache, ccfg):
+        """Score a (B, 1+K) draft chunk in ONE extend pass. The checkpoint
+        carries, per block, what a rejected suffix needs to roll back: the
+        overwritten ring-KV rows for attention blocks, and per-position
+        {conv window, RG-LRU h} stacks for recurrent blocks (the RG-LRU's
+        associative scan already computes every intermediate state)."""
+        x = L.embed_apply(params["embed"], batch["tokens"])
+
+        def body(x, scanned):
+            gp, c = scanned
+            y, nc, ck = self._group_apply(gp, x, ccfg, c, "extend", collect=True)
+            return y, (nc, ck)
+
+        x, (new_g, ck_g) = lax.scan(body, x, (params["groups"], cache["groups"]))
+        new_tail, ck_tail = [], []
+        for tp, tc in zip(params["tail"], cache["tail"]):
+            x, nc, ck = self._rblock(tp, x, ccfg, tc, "extend", collect=True)
+            new_tail.append(nc)
+            ck_tail.append(ck)
+        logits = self._head(params, x, ccfg)
+        return (logits, {"groups": new_g, "tail": new_tail},
+                {"groups": ck_g, "tail": ck_tail})
+
+    def _rblock_rewind(self, cache, ck, keep, b_axis):
+        """Select the checkpointed {conv, h} state at the accept boundary."""
+        w = self.cfg.conv_width
+        conv = slice_rows_per_slot(ck["conv"], keep, b_axis, w - 1)
+        h = slice_rows_per_slot(ck["h"], keep, b_axis, 1)
+        h = jnp.squeeze(h, axis=b_axis + 1)
+        return {"conv": conv.astype(cache["conv"].dtype), "h": h}
+
+    def spec_rewind(self, cache, ckpt, keep):
+        """Per-slot rewind: restore rejected ring-KV rows + rewind pos for
+        attention blocks, select recurrent checkpoints for R blocks."""
+        new_groups = {}
+        for i, kind in enumerate(self.group):
+            c, ck = cache["groups"][f"b{i}"], ckpt["groups"][f"b{i}"]
+            if kind == "R":
+                new_groups[f"b{i}"] = self._rblock_rewind(c, ck, keep, b_axis=1)
+            else:
+                new_groups[f"b{i}"] = seq_rows_restore(c, ck, keep)
+        new_tail = [self._rblock_rewind(c, ck, keep, b_axis=0)
+                    for c, ck in zip(cache["tail"], ckpt["tail"])]
+        return {"groups": new_groups, "tail": new_tail}

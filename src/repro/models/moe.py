@@ -24,7 +24,8 @@ from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain_expert_buffer, constrain_residual
 from repro.models import layers as L
-from repro.models.cache_utils import StackedCacheMixin, take_last_valid
+from repro.models.cache_utils import (StackedCacheMixin, seq_rows_restore,
+                                      seq_rows_snapshot, take_last_valid)
 
 
 def _remat_policy(name: str):
@@ -377,12 +378,15 @@ class MoELM(StackedCacheMixin):
         logits = self._head(params, x, ccfg)
         return logits, {"dense_layers": new_dense, "layers": new_caches}
 
-    def prefill_extend(self, params, batch, cache, ccfg, n_valid=None):
+    def prefill_extend(self, params, batch, cache, ccfg, n_valid=None,
+                       all_logits: bool = False):
         """Append a (right-padded) token chunk to an existing MLA latent (or
         GQA) cache — the continuous-batching admission path. Pad positions
         never influence valid tokens (mask-invalid and overwritten by the
         next write); routed experts see pad tokens but their outputs are
-        sliced away. Returns logits for the last valid token, (B, 1, V)."""
+        sliced away. Returns logits for the last valid token, (B, 1, V) —
+        or for every chunk position, (B, S, V), when ``all_logits`` is set
+        (the speculative-decode verify pass)."""
         x = L.embed_apply(params["embed"], batch["tokens"])
         b, s = batch["tokens"].shape
         nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
@@ -397,5 +401,25 @@ class MoELM(StackedCacheMixin):
             return y, nc
 
         x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
-        logits = self._head(params, take_last_valid(x, nv), ccfg)
+        logits = self._head(params, x if all_logits else take_last_valid(x, nv), ccfg)
         return logits, {"dense_layers": new_dense, "layers": new_caches}
+
+    # --------------------------------------------------- speculative decode
+    def spec_verify(self, params, batch, cache, ccfg):
+        """Score a (B, 1+K) draft chunk in ONE extend pass (drop-free expert
+        dispatch keeps per-token routing independent of the draft batch):
+        per-position logits, advanced cache, and the overwritten MLA-latent
+        (or GQA KV) rows as the rewind checkpoint."""
+        s = batch["tokens"].shape[1]
+        ckpt = {"dense_layers": [seq_rows_snapshot(c, s)
+                                 for c in cache["dense_layers"]],
+                "layers": seq_rows_snapshot(cache["layers"], s)}
+        logits, cache = self.prefill_extend(params, batch, cache, ccfg,
+                                            all_logits=True)
+        return logits, cache, ckpt
+
+    def spec_rewind(self, cache, ckpt, keep):
+        """Per-slot rewind: restore rejected latent/KV rows, rewind pos."""
+        return {"dense_layers": [seq_rows_restore(c, k, keep) for c, k in
+                                 zip(cache["dense_layers"], ckpt["dense_layers"])],
+                "layers": seq_rows_restore(cache["layers"], ckpt["layers"], keep)}

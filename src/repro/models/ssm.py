@@ -17,7 +17,8 @@ from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain_residual
 from repro.models import layers as L
-from repro.models.cache_utils import StackedCacheMixin, take_last_valid
+from repro.models.cache_utils import (StackedCacheMixin, slice_rows_per_slot,
+                                      take_last_valid)
 
 
 def _remat_policy(name: str):
@@ -29,9 +30,14 @@ def _remat_policy(name: str):
     }[name]
 
 
-def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial_state=None):
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial_state=None,
+                return_chunk_states: bool = False):
     """Chunked SSD. x: (b,s,h,p); dt: (b,s,h) (post-softplus); A: (h,) (<0);
     B, C: (b,s,g,n); D: (h,). Returns (y: (b,s,h,p), final_state: (b,h,p,n)).
+
+    ``return_chunk_states`` additionally returns the state BEFORE each chunk
+    (b, nc, h, p, n) — with chunk=1 that is the state after every token, the
+    per-position checkpoint stack speculative decode rewinds onto.
     """
     b, s_orig, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
@@ -89,7 +95,10 @@ def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial_state=None):
     y = (y_intra + y_inter).reshape(b, s, h, p)
     if D is not None:
         y = y + D[None, None, :, None] * x.astype(jnp.float32)
-    return y[:, :s_orig].astype(x.dtype), final_state
+    y = y[:, :s_orig].astype(x.dtype)
+    if return_chunk_states:
+        return y, final_state, states_prev
+    return y, final_state
 
 
 def ssd_decode_step(x, dt, A, B, C, D, state):
@@ -135,15 +144,17 @@ def _conv_extend(x, conv_state, w, b, n_valid=None):
 
     x: (b,s,dim) raw conv inputs, only the first ``n_valid`` real;
     conv_state: (b,width-1,dim) previous raw inputs. Returns the conv
-    outputs for the chunk and the state advanced to the ``n_valid``
-    boundary (so right-padding never leaks into the carry)."""
+    outputs for the chunk, the state advanced to the ``n_valid`` boundary
+    (so right-padding never leaks into the carry), and the full raw input
+    window (b, width-1+s, dim) — the conv state after j chunk tokens is
+    ``full[:, j:j+width-1]``, which is the speculative-rewind checkpoint."""
     width = w.shape[0]
     s = x.shape[1]
     full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (b,w-1+s,dim)
     y = sum(full[:, i:i + s] * w[i] for i in range(width)) + b
     nv = s if n_valid is None else n_valid
     new_state = lax.dynamic_slice_in_dim(full, nv, width - 1, axis=1)
-    return y, new_state.astype(conv_state.dtype)
+    return y, new_state.astype(conv_state.dtype), full
 
 
 def conv_prefill_state(x_raw, width: int):
@@ -204,7 +215,8 @@ class Mamba2LM(StackedCacheMixin):
         dt_raw = zxbcdt[..., di + self.conv_dim:]
         return z, xbc, dt_raw
 
-    def _mixer(self, lp, u, ccfg, cache=None, mode="full", n_valid=None):
+    def _mixer(self, lp, u, ccfg, cache=None, mode="full", n_valid=None,
+               collect: bool = False):
         cfg = self.cfg
         b, s, _ = u.shape
         di, g, n, h = self.d_inner, cfg.ssm_groups, cfg.ssm_state, self.n_heads
@@ -212,11 +224,12 @@ class Mamba2LM(StackedCacheMixin):
         zxbcdt = cascade.linear_apply(lp["in_proj"], u, ccfg)
         z, xbc, dt_raw = self._split_proj(zxbcdt)
 
+        conv_full = None
         if mode == "decode":
             xbc_c, new_conv = _conv_decode(xbc, cache["conv"], lp["conv_w"], lp["conv_b"])
         elif mode == "extend":
-            xbc_c, new_conv = _conv_extend(xbc, cache["conv"], lp["conv_w"],
-                                           lp["conv_b"], n_valid)
+            xbc_c, new_conv, conv_full = _conv_extend(xbc, cache["conv"], lp["conv_w"],
+                                                      lp["conv_b"], n_valid)
         else:
             xbc_c = _causal_conv(xbc, lp["conv_w"], lp["conv_b"])
             new_conv = None  # prefill cache built below from the raw conv input
@@ -231,9 +244,21 @@ class Mamba2LM(StackedCacheMixin):
             dt = dt * (jnp.arange(s) < n_valid)[None, :, None]
         A = -jnp.exp(lp["A_log"])
 
+        ckpt = None
         if mode == "decode":
             y, new_state = ssd_decode_step(x, dt, A, B, C, lp["D"], cache["state"])
             new_cache = {"conv": new_conv, "state": new_state}
+        elif mode == "extend" and collect:
+            # chunk=1 SSD emits the state after EVERY token (states_prev with
+            # unit chunks) — the per-position checkpoints a rejected draft
+            # suffix rewinds onto; s is the small draft chunk, so the short
+            # inter-chunk scan stays cheap
+            y, final_state, st_prev = ssd_chunked(
+                x, dt, A, B, C, lp["D"], 1, initial_state=cache["state"],
+                return_chunk_states=True)
+            new_cache = {"conv": new_conv, "state": final_state}
+            ckpt = {"conv": conv_full,
+                    "state": jnp.concatenate([st_prev, final_state[:, None]], axis=1)}
         elif mode == "extend":
             y, final_state = ssd_chunked(x, dt, A, B, C, lp["D"], cfg.ssm_chunk,
                                          initial_state=cache["state"])
@@ -247,11 +272,17 @@ class Mamba2LM(StackedCacheMixin):
 
         y = y.reshape(b, -1, di)
         y = L.norm_apply(lp["gnorm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype))
-        return cascade.linear_apply(lp["out_proj"], y, ccfg), new_cache
+        out = cascade.linear_apply(lp["out_proj"], y, ccfg)
+        if collect:
+            return out, new_cache, ckpt
+        return out, new_cache
 
-    def _block(self, lp, x, ccfg, cache, mode, n_valid=None):
-        h, nc = self._mixer(lp, L.norm_apply(lp["ln"], x, self.cfg.norm_type), ccfg,
-                            cache, mode, n_valid)
+    def _block(self, lp, x, ccfg, cache, mode, n_valid=None, collect: bool = False):
+        u = L.norm_apply(lp["ln"], x, self.cfg.norm_type)
+        if collect:
+            h, nc, ck = self._mixer(lp, u, ccfg, cache, mode, n_valid, collect=True)
+            return constrain_residual(x + h), nc, ck
+        h, nc = self._mixer(lp, u, ccfg, cache, mode, n_valid)
         return constrain_residual(x + h), nc
 
     # --------------------------------------------------------------- api
@@ -335,3 +366,35 @@ class Mamba2LM(StackedCacheMixin):
         logits = self._head(params, take_last_valid(x, nv), ccfg)
         return logits, {"layers": new_caches,
                         "pos": L.pos_rows(cache["pos"], b) + nv}
+
+    # --------------------------------------------------- speculative decode
+    def spec_verify(self, params, batch, cache, ccfg):
+        """Score a (B, 1+K) draft chunk in ONE extend pass, checkpointing
+        the recurrent state after EVERY chunk token (conv input windows +
+        chunk-1 SSD states) — recurrences cannot be rewound in place, so a
+        rejected suffix rolls back by selecting the checkpoint at the accept
+        boundary."""
+        x = L.embed_apply(params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
+
+        def body(x, scanned):
+            lp, c = scanned
+            y, nc, ck = self._block(lp, x, ccfg, c, "extend", collect=True)
+            return y, (nc, ck)
+
+        x, (new_caches, cks) = lax.scan(body, x, (params["layers"], cache["layers"]))
+        logits = self._head(params, x, ccfg)
+        pos0 = L.pos_rows(cache["pos"], b)
+        return (logits, {"layers": new_caches, "pos": pos0 + s},
+                {"layers": cks, "pos": pos0})
+
+    def spec_rewind(self, cache, ckpt, keep):
+        """Per-slot rewind to ``keep[b]`` committed chunk tokens: select the
+        checkpointed {conv, ssd} state at the accept boundary, rewind pos."""
+        w = self.cfg.conv_width
+        ck = ckpt["layers"]        # conv: (L,B,w-1+s,dim); state: (L,B,s+1,h,p,n)
+        conv = slice_rows_per_slot(ck["conv"], keep, 1, w - 1)
+        state = slice_rows_per_slot(ck["state"], keep, 1, 1)[:, :, 0]
+        return {"layers": {"conv": conv.astype(cache["layers"]["conv"].dtype),
+                           "state": state},
+                "pos": ckpt["pos"] + jnp.asarray(keep, jnp.int32)}

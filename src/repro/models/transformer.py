@@ -20,7 +20,8 @@ from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain_residual
 from repro.models import layers as L
-from repro.models.cache_utils import StackedCacheMixin, take_last_valid
+from repro.models.cache_utils import (StackedCacheMixin, seq_rows_restore,
+                                      seq_rows_snapshot, take_last_valid)
 
 
 def _remat_policy(name: str):
@@ -179,7 +180,7 @@ class TransformerLM(StackedCacheMixin):
     # batched decode never recompiles as traffic comes and goes.
 
     def prefill_extend(self, params: dict, batch: dict, cache: dict,
-                       ccfg: CascadeConfig, n_valid=None):
+                       ccfg: CascadeConfig, n_valid=None, all_logits: bool = False):
         """Append a (possibly right-padded) token chunk to an existing cache.
 
         Chunked-prefill admission path: the chunk shape stays fixed so long
@@ -187,7 +188,8 @@ class TransformerLM(StackedCacheMixin):
         first ``n_valid`` tokens of the chunk are real (full attention:
         pad K/V lands mask-invalid above each row's position; ring buffers:
         pad writes are dropped). Returns logits for the last valid token,
-        (B, 1, V).
+        (B, 1, V) — or for every chunk position, (B, S, V), when
+        ``all_logits`` is set (the speculative-decode verify pass).
         """
         x = self._embed(params, batch, ccfg)
         b, s, _ = x.shape
@@ -199,5 +201,24 @@ class TransformerLM(StackedCacheMixin):
             return y, nc
 
         x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]))
-        logits = self._head(params, take_last_valid(x, nv), ccfg)
+        logits = self._head(params, x if all_logits else take_last_valid(x, nv), ccfg)
         return logits, {"layers": new_caches}
+
+    # --------------------------------------------------- speculative decode
+    def spec_verify(self, params: dict, batch: dict, cache: dict,
+                    ccfg: CascadeConfig):
+        """Score a (B, 1+K) draft chunk in ONE extend pass: per-position
+        logits (B, 1+K, V), the advanced cache, and a rewind checkpoint
+        (the KV rows the chunk overwrites — for ring buffers those are live
+        in-window entries that a rejection must restore)."""
+        ckpt = {"layers": seq_rows_snapshot(cache["layers"],
+                                            batch["tokens"].shape[1])}
+        logits, cache = self.prefill_extend(params, batch, cache, ccfg,
+                                            all_logits=True)
+        return logits, cache, ckpt
+
+    def spec_rewind(self, cache: dict, ckpt: dict, keep) -> dict:
+        """Per-slot rewind after a verify pass: the first ``keep[b]`` chunk
+        tokens stay committed, the rejected suffix rows are restored and
+        ``pos`` rewinds to ``pos0 + keep[b]``."""
+        return {"layers": seq_rows_restore(cache["layers"], ckpt["layers"], keep)}

@@ -14,7 +14,11 @@ the replica-set controller used by the serving example:
   holds for EVERY cache family, not just full-attention KV: ring-buffer KV,
   RG-LRU/conv state and SSD state are all deterministic functions of the
   token prefix, so the survivor's (chunked) re-prefill rebuilds them
-  exactly — there is nothing replica-local to checkpoint,
+  exactly — there is nothing replica-local to checkpoint. It also holds
+  mid-SPECULATION: ``tokens_out`` only ever contains tokens the verify
+  pass committed (accepted drafts + the bonus token — rejected drafts are
+  rolled back before the engine step returns), so the rebuilt prompt
+  carries exactly the client-visible stream and never an unverified draft,
 * **straggler mitigation**: requests on a replica whose p99 step latency
   exceeds ``straggler_factor`` x the fleet median are eligible for
   speculative re-dispatch to the fastest healthy replica.
@@ -37,7 +41,11 @@ def rebuild_request(req: Request) -> Request:
     ring-buffer or recurrent — and then generates the stream's next token,
     so already-emitted history is never recomputed (which also makes
     failover safe under temperature sampling, where a re-draw could rewrite
-    a token the client has already seen). Retirement still fires at the
+    a token the client has already seen). Under speculative decode the
+    carry is automatically accepted-tokens-only: the engine appends to
+    ``tokens_out`` strictly after verification, so a replica dying between
+    a verify pass and its rewind can never leak rejected drafts into the
+    rebuilt prompt. Retirement still fires at the
     ORIGINAL max_new_tokens since ``tokens_out`` carries over;
     ``prompt_carried`` records how many ``tokens_out`` entries the prompt
     now contains, so repeated failures never double-bake tokens.

@@ -16,7 +16,15 @@ streams backed by ONE stacked, fixed-shape KV cache pytree. Each step:
 2. **decode** — ONE donated, jitted batched ``decode_step`` runs over the
    whole slot grid (weight streaming is paid once per step, not once per
    request — the CASCADE batching analysis, Table 9/10); inactive slots
-   compute masked garbage that never escapes;
+   compute masked garbage that never escapes. With ``draft_len > 0`` the
+   step instead runs **speculative decode**: a model-free prompt-lookup
+   drafter (``serve/spec.py``) proposes K tokens per slot, ONE batched
+   verify pass (the fixed-shape ``prefill_extend`` path) scores all K+1
+   positions at once, the longest draft prefix matching the model's own
+   greedy argmax commits (plus the bonus token), and the rejected suffix
+   rolls back through per-family cache rewind ops (``spec_rewind``) —
+   weight streaming is amortized over every accepted token, and the
+   emitted stream is token-exact with plain greedy decode;
 3. a CREST probe wave optionally shadow-tests the lm_head matmul;
 4. finished streams retire by simply freeing their slot — admission and
    retirement are cache-slot writes, so nothing ever recompiles as traffic
@@ -40,10 +48,14 @@ prompt length is NOT bounded by ``max_len`` (window-aware admission) and
 they never retire on a context limit. ``batched=False`` keeps the legacy
 slot-wise loop as the parity baseline; multi-codebook heads (musicgen)
 remain slot-wise. Decoding is greedy argmax by default; ``temperature`` /
-``top_k`` switch on (deterministic, seeded) sampling. ``elastic.py``
-handles replica failure by re-queueing in-flight requests (decode state —
-including recurrent state — is reconstructible from the prompt + emitted
-tokens).
+``top_k`` switch on (deterministic, seeded) sampling — drawn ON DEVICE
+(``jax.random.categorical`` inside the jitted step) for the batched grid,
+host-side for the batch-1 admission/slot-wise paths. Speculation is
+greedy-only (sampling disables it). ``elastic.py`` handles replica failure
+by re-queueing in-flight requests (decode state — including recurrent
+state — is reconstructible from the prompt + emitted tokens; ``tokens_out``
+only ever holds verify-committed tokens, so a failover can never carry an
+unaccepted draft).
 """
 from __future__ import annotations
 
@@ -58,11 +70,30 @@ import numpy as np
 
 from repro.core import crest
 from repro.core.cascade import CascadeConfig
+from repro.serve.spec import ngram_propose
 
 #: methods a model must expose for the batched (stacked-cache) fast path
 #: (``stack_caches``/``cache_at`` are companion utilities on the model, but
 #: the engine itself only needs slot writes + chunked extend)
 _BATCHED_API = ("write_cache", "prefill_extend")
+
+#: additional methods required for speculative decode (verify pass + per-
+#: family cache rewind)
+_SPEC_API = ("spec_verify", "spec_rewind")
+
+
+def _sample_tokens(logits, key, temperature: float, top_k: int):
+    """(B, V) logits -> (B,) sampled token ids, entirely on device.
+
+    Each row's draw is a pure function of (key, row index): the Gumbel
+    noise is positional, so an active slot's sample never depends on what
+    garbage the inactive slots hold.
+    """
+    x = logits.astype(jnp.float32) / temperature
+    if 0 < top_k < x.shape[-1]:
+        kth = jax.lax.top_k(x, top_k)[0][:, -1][:, None]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    return jax.random.categorical(key, x, axis=-1)
 
 
 @dataclasses.dataclass
@@ -97,6 +128,14 @@ class ServeConfig:
                                   # test path); > 0: seeded sampling
     top_k: int = 0                # restrict sampling to the k best logits (0 = all)
     sample_seed: int = 0          # sampling is deterministic given seed + call order
+    draft_len: int = 0            # speculative decode: K drafted tokens per slot
+                                  # per step (0 = plain one-token decode; clamped
+                                  # to window-1 for ring-buffer archs; greedy
+                                  # only — temperature > 0 disables speculation)
+    ngram_max: int = 3            # longest suffix n-gram the prompt-lookup
+                                  # drafter tries to match (see serve/spec.py)
+    ngram_lookback: int = 512     # drafter scans at most this many trailing
+                                  # context tokens (bounds per-step host work)
 
 
 @dataclasses.dataclass
@@ -127,6 +166,11 @@ class ServeEngine:
         self._rejected = 0
         self._staging: Optional[_Staging] = None
         self._rng = np.random.default_rng(scfg.sample_seed)
+        self._accepted_drafts = 0     # drafted tokens the verify pass accepted
+        self._spec_slot_steps = 0     # (slot, step) pairs that ran speculation
+        # per-slot draft context, appended incrementally as tokens commit
+        # (rebuilding prompt+emitted every step would be O(stream^2) host work)
+        self._spec_ctx: List[Optional[list]] = [None] * scfg.max_batch
 
         # batched mode needs the stacked-cache API and flat logits
         # (multi-codebook heads only work slot-wise for now); every other
@@ -140,11 +184,23 @@ class ServeEngine:
         # is not bounded by the cache, and there is no context-limit retire
         self.ctx_unbounded = bool(getattr(model, "unbounded_context", False))
         kv_dtype = ccfg.resolved_kv_dtype
+        # speculative decode: greedy-only (acceptance compares against the
+        # model's own argmax), batched-only, and the (1+K) verify chunk must
+        # fit inside a ring buffer just like a prefill chunk
+        self._draft_len = 0
+        if (self.batched and scfg.draft_len > 0 and scfg.temperature <= 0.0
+                and all(hasattr(model, m) for m in _SPEC_API)):
+            self._draft_len = (min(scfg.draft_len, window - 1) if window
+                               else scfg.draft_len)
+        self.spec = self._draft_len > 0
         if self.batched:
             # round the cache length up to a chunk multiple so padded chunk
-            # writes never clamp into (and clobber) valid cache entries
+            # writes never clamp into (and clobber) valid cache entries; a
+            # verify pass writes up to draft_len rows past a stream's last
+            # position, so speculation adds that much headroom
             c = scfg.prefill_chunk
-            self._cache_len = (-(-scfg.max_len // c) * c) if c > 0 else scfg.max_len
+            need = scfg.max_len + self._draft_len
+            self._cache_len = (-(-need // c) * c) if c > 0 else need
             # ring buffers hold exactly the window; a prefill chunk must fit
             # inside the ring so within-chunk writes never collide (see
             # layers.attn_apply)
@@ -159,6 +215,23 @@ class ServeEngine:
                                                          n_valid=n),
                 donate_argnums=(2,))
             self._write_fn = jax.jit(model.write_cache, donate_argnums=(0,))
+            if self.spec:
+                self._verify_fn = jax.jit(
+                    lambda p, t, c_: model.spec_verify(p, {"tokens": t}, c_, ccfg),
+                    donate_argnums=(2,))
+                # donate only the cache: checkpoint leaves have chunk-sized
+                # shapes no output can reuse (donating them just warns)
+                self._rewind_fn = jax.jit(model.spec_rewind, donate_argnums=(0,))
+            if scfg.temperature > 0.0:
+                # on-device sampling for the batched grid: decode + categorical
+                # draw fused in one jitted step (no per-step host vocab copy)
+                def _sampled_step(p, t, c_, key):
+                    logits, c2 = model.decode_step(p, {"tokens": t}, c_, ccfg)
+                    return _sample_tokens(logits[:, -1], key, scfg.temperature,
+                                          scfg.top_k), c2
+                self._sample_fn = jax.jit(_sampled_step, donate_argnums=(2,))
+                self._sample_key = jax.random.PRNGKey(scfg.sample_seed)
+                self._sample_step = 0
         else:
             self._cache_len = scfg.max_len
             self._chunk_cap = 0
@@ -246,6 +319,12 @@ class ServeEngine:
             st.req.first_token_at = time.monotonic()
             self.cache = self._write_fn(self.cache, st.cache, jnp.int32(st.slot))
             self.slots[st.slot] = st.req
+            if self.spec:
+                # seed the slot's draft context with the visible stream
+                # (prompt already contains failover-carried tokens)
+                self._spec_ctx[st.slot] = (
+                    st.req.prompt.tolist()
+                    + st.req.tokens_out[st.req.prompt_carried:])
             self._staging = None
             # the prefill-generated token may already end the stream
             self._retire_if_done(st.req, st.slot, nxt)
@@ -320,15 +399,19 @@ class ServeEngine:
         toks = np.zeros((self.scfg.max_batch, 1), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].tokens_out[-1]
-        logits, self.cache = self._decode_fn(self.params, jnp.asarray(toks), self.cache)
         if self.scfg.temperature <= 0.0:
+            logits, self.cache = self._decode_fn(self.params, jnp.asarray(toks),
+                                                 self.cache)
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         else:
-            # sample ONLY the active rows: garbage slots must not consume
-            # RNG draws (results would depend on unrelated slot occupancy)
-            nxt = np.zeros(self.scfg.max_batch, np.int64)
-            host = np.asarray(logits[:, -1], np.float64)
-            nxt[active] = self._sample_rows(host[active])
+            # on-device sampling: one fused decode+categorical dispatch; the
+            # per-row Gumbel noise is positional (a function of key + slot
+            # index), so active rows never depend on garbage-slot contents
+            key = jax.random.fold_in(self._sample_key, self._sample_step)
+            self._sample_step += 1
+            sampled, self.cache = self._sample_fn(self.params, jnp.asarray(toks),
+                                                  self.cache, key)
+            nxt = np.asarray(sampled)
         produced = 0
         for i in active:
             req = self.slots[i]
@@ -336,6 +419,62 @@ class ServeEngine:
             req.tokens_out.append(tok)
             produced += 1
             self._retire_if_done(req, i, tok)
+        return produced
+
+    def _decode_spec(self, active: List[int]) -> int:
+        """One speculative engine step: draft K tokens per slot (prompt
+        lookup over the slot's own stream), score all K+1 positions in ONE
+        batched verify pass, commit the longest draft prefix matching the
+        model's greedy argmax plus the bonus token, then rewind each slot's
+        cache to its accept boundary. Token-exact with plain greedy decode:
+        every committed token IS the model's argmax given its prefix."""
+        k = self._draft_len
+        toks = np.zeros((self.scfg.max_batch, k + 1), np.int32)
+        for i in active:
+            # the draft context is the slot's visible stream (prompt — which
+            # already contains failover-carried tokens — plus every token
+            # emitted since), maintained incrementally; the drafter scans at
+            # most the trailing ``ngram_lookback`` tokens of it
+            ctx = self._spec_ctx[i]
+            toks[i, 0] = ctx[-1]               # == tokens_out[-1], pending
+            toks[i, 1:] = ngram_propose(
+                np.asarray(ctx[-self.scfg.ngram_lookback:], np.int32),
+                k, self.scfg.ngram_max)
+        logits, self.cache, ckpt = self._verify_fn(self.params, jnp.asarray(toks),
+                                                   self.cache)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))     # (B, K+1)
+        keep = np.zeros(self.scfg.max_batch, np.int32)
+        produced = 0
+        for i in active:
+            req = self.slots[i]
+            a = 0
+            while a < k and greedy[i, a] == toks[i, a + 1]:
+                a += 1
+            keep[i] = a + 1                     # accepted drafts + pending token
+            self._spec_slot_steps += 1
+            # commit greedy[0..a] (= accepted drafts + bonus) one at a time so
+            # eos / max_new / context-limit retirement fires at EXACTLY the
+            # token where plain decode would have stopped
+            delivered = 0
+            ctx = self._spec_ctx[i]
+            for j in range(a + 1):
+                tok = int(greedy[i, j])
+                req.tokens_out.append(tok)
+                ctx.append(tok)
+                delivered += 1
+                self._retire_if_done(req, i, tok)
+                if req.done:
+                    break
+            # acceptance counts only DELIVERED drafts (retirement may truncate
+            # mid-acceptance), keeping tokens/step/slot = accepted_per_step + 1
+            self._accepted_drafts += delivered - 1
+            produced += delivered
+            lb = self.scfg.ngram_lookback
+            if len(ctx) > 2 * lb:               # drafter only reads the tail
+                del ctx[:len(ctx) - lb]
+        # roll every slot back to its accept boundary (inactive slots:
+        # keep=0 — a full rewind, restoring the pre-verify cache)
+        self.cache = self._rewind_fn(self.cache, ckpt, jnp.asarray(keep))
         return produced
 
     def _decode_slotwise(self, active: List[int]) -> int:
@@ -360,7 +499,8 @@ class ServeEngine:
         self._steps += 1
         if self.scfg.crest_enabled and self._steps % self.scfg.crest_every == 0:
             self._crest_probe()
-        produced = (self._decode_batched(active) if self.batched
+        produced = (self._decode_spec(active) if self.spec
+                    else self._decode_batched(active) if self.batched
                     else self._decode_slotwise(active))
         self.step_times.append(time.monotonic() - t0)
         self._decode_tokens += produced
@@ -420,6 +560,13 @@ class ServeEngine:
         total = float(st.sum()) if st.size else 0.0
         return {
             "batched": self.batched,
+            "spec": self.spec,
+            "draft_len": self._draft_len,
+            "draft_tokens_accepted": self._accepted_drafts,
+            # mean drafted tokens accepted per (slot, step); +1 bonus token
+            # always commits, so tokens/step/slot = accepted_per_step + 1
+            "accepted_per_step": (self._accepted_drafts / self._spec_slot_steps
+                                  if self._spec_slot_steps else 0.0),
             "steps": int(st.size),
             "decode_tokens": self._decode_tokens,
             "tokens_per_s": (self._decode_tokens / total) if total > 0 else 0.0,

@@ -1,0 +1,45 @@
+"""Model-free draft proposals for speculative decode (prompt lookup).
+
+The ZettaLith economics (paper Table 9/10): a decode step streams the full
+weight set from HBM whether it scores 1 token or K+1, so any token the
+verify pass accepts beyond the first is nearly free. The cheapest drafter
+that exploits this is **prompt lookup / n-gram** (no second model, no extra
+weights to stream): repeated spans — code, templated text, self-repetition
+in long generations — are predicted by finding the current suffix n-gram
+earlier in the stream and proposing whatever followed it.
+
+Correctness never depends on draft quality: the engine's verify pass only
+commits draft tokens that match the model's own greedy argmax, so a bad
+draft costs nothing (the step still commits one token, exactly like plain
+decode) and a good draft commits up to K+1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def ngram_propose(context: np.ndarray, k: int, ngram_max: int) -> np.ndarray:
+    """Propose ``k`` draft tokens by prompt lookup over ``context``.
+
+    Finds the longest suffix n-gram (n = ngram_max .. 1) of ``context`` that
+    also occurs earlier, and returns the ``k`` tokens that followed its most
+    recent earlier occurrence, zero-padded at the tail. A miss returns
+    zeros — a guaranteed-rejected (but free) guess.
+    """
+    ctx = np.asarray(context, np.int32).ravel()
+    out = np.zeros(k, np.int32)
+    n_ctx = len(ctx)
+    if n_ctx < 2 or k <= 0:
+        return out
+    for n in range(min(ngram_max, n_ctx - 1), 0, -1):
+        suffix = ctx[n_ctx - n:]
+        # windows of length n starting at 0 .. n_ctx-n-1 (exclude the suffix
+        # occurrence itself)
+        wins = np.lib.stride_tricks.sliding_window_view(ctx, n)[:-1]
+        hits = np.nonzero((wins == suffix).all(axis=1))[0]
+        if hits.size:
+            start = int(hits[-1]) + n          # most recent continuation
+            cont = ctx[start:start + k]
+            out[:len(cont)] = cont
+            return out
+    return out

@@ -1,0 +1,285 @@
+"""Speculative decode: draft/verify/rewind across every registry family.
+
+Speculation may only change SPEED, never output: every committed token is
+the model's own greedy argmax given its prefix, so spec-on must be
+token-exact with the plain (PR 2) single-token decode path — including at
+ring-buffer wrap boundaries, through failover, and for eos / max_new /
+context-limit retirement that fires mid-acceptance. A full rewind
+(keep=0) must be the identity on the pre-verify cache for every cache
+family: dense KV, MLA latents, ring buffers, and checkpointed recurrent
+{conv, h, ssd} state.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeConfig
+from repro.models import registry
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.spec import ngram_propose
+
+jax.config.update("jax_platform_name", "cpu")
+
+CCFG = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+
+
+def _load(arch):
+    cfg, model = registry.load(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module", params=sorted(registry.FAMILY_SMOKE), ids=str)
+def family_model(request):
+    return (request.param,) + _load(registry.FAMILY_SMOKE[request.param])
+
+
+def _requests(cfg, lens, max_new=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(0, cfg.vocab, int(n)).astype(np.int32),
+                    max_new_tokens=max_new) for i, n in enumerate(lens)]
+
+
+def _run(model, params, cfg, lens, scfg, max_new=4, seed=0, max_steps=400):
+    eng = ServeEngine(model, params, CCFG, scfg)
+    reqs = _requests(cfg, lens, max_new=max_new, seed=seed)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_steps)
+    return reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# drafter (model-free prompt lookup)
+# ---------------------------------------------------------------------------
+
+def test_ngram_propose_matches_longest_recent_suffix():
+    ctx = [1, 2, 3, 9, 1, 2, 3]
+    # suffix 3-gram (1,2,3) occurred at 0; continuation is [9, 1, 2]
+    assert ngram_propose(ctx, 3, 3).tolist() == [9, 1, 2]
+    # most RECENT earlier occurrence wins
+    ctx = [5, 7, 1, 5, 7, 2, 5, 7]
+    assert ngram_propose(ctx, 1, 2).tolist() == [2]
+
+
+def test_ngram_propose_falls_back_to_shorter_ngrams_and_misses():
+    # no 3- or 2-gram match, but the 1-gram suffix [4] occurred earlier
+    assert ngram_propose([4, 1, 2, 4], 2, 3).tolist() == [1, 2]
+    # total miss -> zeros (a free, guaranteed-rejected guess)
+    assert ngram_propose([1, 2, 3], 2, 3).tolist() == [0, 0]
+    assert ngram_propose([7], 2, 3).tolist() == [0, 0]
+    # continuation shorter than k is zero-padded
+    assert ngram_propose([9, 3, 9], 3, 1).tolist() == [3, 9, 0]
+
+
+# ---------------------------------------------------------------------------
+# per-family token-exact parity (the tentpole guarantee)
+# ---------------------------------------------------------------------------
+
+def test_family_spec_equals_plain_decode_token_exact(family_model):
+    """Spec-on (draft/verify/rewind) emits EXACTLY the plain greedy decode
+    stream for every family — dense KV, MLA, ring + RG-LRU, conv + SSD."""
+    fam, cfg, model, params = family_model
+    lens = [8, 5, 12, 3]
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8), max_new=6)
+    out, eng = _run(model, params, cfg, lens,
+                    ServeConfig(max_batch=2, max_len=64, batched=True,
+                                prefill_chunk=8, draft_len=3), max_new=6)
+    assert eng.spec, f"{fam} must take the speculative path"
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (fam, a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_family_spec_with_budgeted_chunked_prefill_token_exact(family_model):
+    """Speculation interleaved with budgeted chunked prefill admissions."""
+    fam, cfg, model, params = family_model
+    lens = [17, 8, 29]
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8, token_budget=8), max_new=5)
+    out, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8, token_budget=8, draft_len=4),
+                  max_new=5)
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (fam, a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_family_spec_full_rewind_is_identity(family_model):
+    """spec_rewind(keep=0) after a verify pass restores the pre-verify
+    cache BIT-EXACTLY — rejected ring writes, recurrent checkpoints and
+    position tables all roll back."""
+    fam, cfg, model, params = family_model
+    b = 3
+    cache = model.init_cache(b, 32, dtype=jnp.float32)
+    for i, n in enumerate([5, 8, 3]):       # slots at different positions
+        toks = jnp.asarray(np.arange(n)[None, :] % cfg.vocab, jnp.int32)
+        _, sub = model.prefill(params, {"tokens": toks}, CCFG, max_len=32)
+        cache = model.write_cache(cache, sub, i)
+    before = jax.tree.leaves(cache)
+    chunk = jnp.asarray(np.arange(b * 4).reshape(b, 4) % cfg.vocab, jnp.int32)
+    logits, after, ckpt = model.spec_verify(params, {"tokens": chunk}, cache, CCFG)
+    assert logits.shape == (b, 4, cfg.vocab)
+    rewound = model.spec_rewind(after, ckpt, jnp.zeros((b,), jnp.int32))
+    restored = jax.tree.leaves(rewound)
+    assert len(before) == len(restored)
+    for x, y in zip(before, restored):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y)), fam
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer wrap + draft clamping (griffin)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def griffin_w8():
+    cfg, model = registry.load("recurrentgemma-2b", smoke=True)
+    cfg = dataclasses.replace(cfg, window=8)
+    model = registry.build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    return cfg, model, params
+
+
+def test_spec_rewind_at_ring_wrap_token_exact(griffin_w8):
+    """Draft chunks that straddle the ring-buffer wrap: rejected writes
+    clobber live in-window entries, so the rewind must RESTORE them (a pos
+    rewind alone would silently drop attention context)."""
+    cfg, model, params = griffin_w8
+    lens = [23, 40, 9, 16]                  # prompts well past window=8
+    ref, _ = _run(model, params, cfg, lens,
+                  ServeConfig(max_batch=2, max_len=64, batched=True,
+                              prefill_chunk=8), max_new=8)
+    out, eng = _run(model, params, cfg, lens,
+                    ServeConfig(max_batch=2, max_len=64, batched=True,
+                                prefill_chunk=8, draft_len=5), max_new=8)
+    assert eng.spec
+    for a, b in zip(ref, out):
+        assert a.tokens_out == b.tokens_out, (a.uid, a.tokens_out, b.tokens_out)
+
+
+def test_spec_draft_len_clamped_to_ring(griffin_w8):
+    """A (1+K) verify chunk must fit the ring like any extend chunk."""
+    cfg, model, params = griffin_w8
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=1, max_len=64, batched=True,
+                                  prefill_chunk=8, draft_len=32))
+    assert eng.spec and eng._draft_len == 7   # window 8 -> chunk of 8
+
+
+# ---------------------------------------------------------------------------
+# retirement fires at exactly the right token mid-acceptance
+# ---------------------------------------------------------------------------
+
+def test_spec_eos_mid_acceptance_retires_exactly(family_model):
+    """eos emitted inside an accepted run must truncate the stream at the
+    same token plain decode stops at (never expose post-eos drafts)."""
+    fam, cfg, model, params = family_model
+    probe, _ = _run(model, params, cfg, [8],
+                    ServeConfig(max_batch=1, max_len=64, batched=True),
+                    max_new=6)
+    eos = probe[0].tokens_out[2]            # a mid-stream token
+    ref, _ = _run(model, params, cfg, [8],
+                  ServeConfig(max_batch=1, max_len=64, batched=True,
+                              eos_id=eos), max_new=6)
+    out, _ = _run(model, params, cfg, [8],
+                  ServeConfig(max_batch=1, max_len=64, batched=True,
+                              eos_id=eos, draft_len=4), max_new=6)
+    assert out[0].tokens_out == ref[0].tokens_out, fam
+    assert out[0].tokens_out[-1] == eos or len(out[0].tokens_out) == 6
+
+
+# ---------------------------------------------------------------------------
+# failover mid-speculation
+# ---------------------------------------------------------------------------
+
+def test_spec_failover_carries_only_accepted_tokens(family_model):
+    """Replica death mid-speculation: the rebuilt prompt contains the
+    original prompt + every COMMITTED token and nothing else (unaccepted
+    drafts never enter ``tokens_out``), and the survivor finishes the
+    stream token-exact with an unkilled plain-decode run."""
+    from repro.serve.elastic import ReplicaSet
+    fam, cfg, model, params = family_model
+    ref, _ = _run(model, params, cfg, [8],
+                  ServeConfig(max_batch=1, max_len=64, batched=True),
+                  max_new=8, seed=3)
+    scfg = ServeConfig(max_batch=1, max_len=64, batched=True, draft_len=3)
+    rs = ReplicaSet([ServeEngine(model, params, CCFG, scfg) for _ in range(2)])
+    victim = _requests(cfg, [8], max_new=8, seed=3)[0]
+    rs.submit(victim)
+    for _ in range(3):                      # prefill + a couple of spec steps
+        rs.step()
+    emitted = list(victim.tokens_out)
+    killed_on = next(i for i, e in enumerate(rs.engines) if victim in e.slots)
+    rs.kill_replica(killed_on)
+    clone = rs.requeued[0]
+    # the carry invariant: prompt grew by exactly the committed tokens
+    assert clone.prompt_carried == len(emitted)
+    assert clone.prompt.tolist() == victim.prompt.tolist() + emitted
+    rs.drain(max_steps=200)
+    assert clone.done
+    assert clone.tokens_out == ref[0].tokens_out, (fam, clone.tokens_out,
+                                                   ref[0].tokens_out)
+
+
+# ---------------------------------------------------------------------------
+# degeneration + gating
+# ---------------------------------------------------------------------------
+
+def test_draft_len_zero_degenerates_to_plain_batched(family_model):
+    """draft_len=0 must be the PR 2 path: no spec attributes consulted, one
+    decode dispatch per step."""
+    fam, cfg, model, params = family_model
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=2, max_len=64, batched=True,
+                                  draft_len=0))
+    assert eng.batched and not eng.spec
+    for r in _requests(cfg, [8, 8]):
+        eng.submit(r)
+    calls = []
+    inner = eng._decode_fn
+    eng._decode_fn = lambda *a: calls.append(1) or inner(*a)
+    eng.step()
+    assert len(calls) == 1
+
+
+def test_sampling_disables_speculation():
+    """Speculation is greedy-only: temperature > 0 falls back to the
+    (on-device) sampled batched path, which must still be seed-deterministic."""
+    cfg, model, params = _load("codeqwen1.5-7b")
+    scfg = ServeConfig(max_batch=2, max_len=64, batched=True, draft_len=4,
+                       temperature=0.9, top_k=5, sample_seed=11)
+    a, eng = _run(model, params, cfg, [8, 5], scfg, max_new=5)
+    assert not eng.spec
+    b_, _ = _run(model, params, cfg, [8, 5], scfg, max_new=5)
+    for ra, rb in zip(a, b_):
+        assert ra.tokens_out == rb.tokens_out
+        assert all(0 <= t < cfg.vocab for t in ra.tokens_out)
+
+
+def test_spec_metrics_report_acceptance():
+    """Force full acceptance (zeroed head -> constant argmax, so the n-gram
+    drafter predicts the stream perfectly after warmup) and check the
+    acceptance accounting actually counts delivered drafts."""
+    cfg, model, params = _load("codeqwen1.5-7b")
+    params = dict(params)
+    params["lm_head"] = jax.tree.map(jnp.zeros_like, params["lm_head"])
+    rng = np.random.default_rng(0)
+    pat = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=1, max_len=256, batched=True,
+                                  prefill_chunk=8, draft_len=4))
+    eng.submit(Request(uid=0, prompt=np.tile(pat, 5), max_new_tokens=41))
+    eng.run_until_drained(200)
+    m = eng.metrics()
+    assert m["spec"] and m["draft_len"] == 4
+    # constant stream: every step after the first accepts all 4 drafts (the
+    # very first draft may miss before a 0 enters the context)
+    assert m["accepted_per_step"] > 3.0, m["accepted_per_step"]
+    assert m["decode_tokens"] == 40         # first token comes from prefill
+    # tokens delivered per slot-step = accepted drafts + the bonus token
+    assert m["decode_tokens"] == m["draft_tokens_accepted"] + m["steps"]
