@@ -175,3 +175,42 @@ def analyze(text: str) -> dict:
         "collectives": coll,
         "collective_bytes": total_coll,
     }
+
+
+def partial_sum_allreduces(text: str) -> dict:
+    """Count all-reduce ops whose combiner is an ADD — partial-sum traffic,
+    the quantity CASCADE abolishes (paper Sections 2.2, 13.5).
+
+    An all-reduce's reduction computation is named by ``to_apply=``; a
+    combiner CONTAINING an ``add`` accumulates partial products (max/min/or
+    combiners — argmax lowerings, mask folds — are not partial sums and are
+    ignored). Containment rather than root-op equality matters for variadic
+    all-reduces (XLA's combiner pass merges several into one op whose
+    combiner ROOTs a ``tuple`` of adds), and the async ``-start`` forms of
+    both all-reduce and reduce-scatter are counted — a gate must
+    over-approximate, never false-negative. Returns
+    ``{"count", "bytes", "ops": [(name, bytes), ...]}`` over EVERY
+    computation in the module, loop bodies included — the serving assertion
+    is "zero partial-sum all-reduce anywhere in the decode step", so no
+    multiplicity weighting is needed.
+    """
+    comps, _ = parse_computations(text)
+    out = {"count": 0, "bytes": 0, "ops": []}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op not in ("all-reduce", "all-reduce-start",
+                              "reduce-scatter", "reduce-scatter-start"):
+                continue
+            target = None
+            for kw in _CALL_RE.finditer(ins.rest):
+                if kw.group(0).startswith("to_apply="):
+                    target = kw.group(1)
+                    break
+            combiner_adds = (target in comps and
+                             any(i.op == "add" for i in comps[target].instrs))
+            if combiner_adds:
+                b = _type_bytes(ins.type_str)
+                out["count"] += 1
+                out["bytes"] += b
+                out["ops"].append((f"{comp.name}/{ins.name}", b))
+    return out

@@ -50,12 +50,17 @@ def main():
     serving_path = next((p for p in ("results/bench_serving.json",
                                      "results/serving.json")
                          if os.path.exists(p)), None)
-    if serving_path:
-        rows = json.load(open(serving_path))
+    rows = json.load(open(serving_path)) if serving_path else []
+    # the CI multi-device leg writes its --mesh rows to a sibling file so
+    # the single-device gate artifact stays byte-stable; merge if present
+    if os.path.exists("results/bench_serving_mesh.json"):
+        rows += json.load(open("results/bench_serving_mesh.json"))
+    if rows:
         print("\n## Serving decode throughput (benchmarks/serving.py)\n")
         print("| family | batch | slotwise tok/s | batched tok/s | speedup "
-              "| batched p99 step ms | spec tok/s | accepted/step | spec vs batched |")
-        print("|" + "---|" * 9)
+              "| batched p99 step ms | spec tok/s | accepted/step | spec vs batched "
+              "| mesh tok/s | partial-sum AR |")
+        print("|" + "---|" * 11)
         by_key = {}
         for r in rows:
             key = (r.get("family", r.get("arch", "?")), r.get("max_batch", "?"))
@@ -67,11 +72,61 @@ def main():
             s = by_key[(fam, b)].get("slotwise", {})
             k = by_key[(fam, b)].get("batched", {})
             p = by_key[(fam, b)].get("spec", {})
+            m = by_key[(fam, b)].get("mesh", {})
+            # the zero-partial-sum invariant, rendered per mesh row: 0 for
+            # cascade is the paper's claim holding as a measurement
+            ar = m.get("partial_sum_allreduces", "—")
+            mesh_tok = m.get("tokens_per_s", "—")
+            if m:
+                mesh_tok = f"{mesh_tok} ({m.get('tp_policy', '?')})"
             print(f"| {fam} | {b} | {s.get('tokens_per_s','—')} "
                   f"| {k.get('tokens_per_s','—')} "
                   f"| {k.get('speedup_vs_slotwise','—')}x | {k.get('step_ms_p99','—')} "
                   f"| {p.get('tokens_per_s','—')} | {p.get('accepted_per_step','—')} "
-                  f"| {p.get('speedup_vs_batched','—')}x |")
+                  f"| {p.get('speedup_vs_batched','—')}x | {mesh_tok} | {ar} |")
+
+    # ROADMAP wiring: measured decode tokens/s (CPU smoke models, serving
+    # bench) next to the TPU weight-streaming bound from the roofline decode
+    # cells (Table 9/10 projection). The pairing is deliberately labelled —
+    # smoke measurement vs production projection — so the table reads as
+    # "what we measured" and "what the paper's balance permits", per family.
+    roof = next((d for d in (opt, faith, base) if d), None)
+    bound_rows = [r for r in (roof or {}).values()
+                  if r.get("status") == "ok" and "decode_bound_tokens_per_s" in r]
+    if bound_rows and rows:
+        fam_of = {}
+        try:
+            import sys
+            sys.path.insert(0, "src")
+            from repro.models import registry as _reg
+            for alias in _reg.ALIASES:
+                fam_of[alias] = _reg.get_config(alias).family
+        except Exception:
+            pass
+        measured = {}
+        for r in rows:
+            if r.get("mode") == "batched" and isinstance(r.get("max_batch"), int):
+                f = r.get("family")
+                if f and r["max_batch"] >= measured.get(f, (0, 0))[0]:
+                    measured[f] = (r["max_batch"], r["tokens_per_s"])
+        print("\n## Decode: measured vs weight-streaming bound\n")
+        print("bound = global_batch / (per-device state bytes / HBM bw) — the "
+              "Table 9/10 weight-streaming ceiling on the production mesh; "
+              "measured = CPU smoke-scale serving bench (largest batch).\n")
+        print("| arch | shape | family | bound tok/s (TPU projection) "
+              "| weight-stream GB/dev | measured tok/s (CPU smoke) |")
+        print("|" + "---|" * 6)
+        for r in sorted(bound_rows, key=lambda x: (x["arch"], x["shape"])):
+            fam = fam_of.get(r["arch"], "?")
+            # config families -> serving-bench families (dense GQA/MHA and
+            # the modality stubs all decode through the transformer engine)
+            fam = {"hybrid": "griffin", "dense": "transformer",
+                   "audio": "transformer", "vlm": "transformer"}.get(fam, fam)
+            mb, mt = measured.get(fam, (None, "—"))
+            gb = (r.get("weight_stream_bytes_per_device") or 0) / 1e9
+            mcell = f"{mt} (b={mb})" if mb else "—"
+            print(f"| {r['arch']} | {r['shape']} | {fam} "
+                  f"| {r['decode_bound_tokens_per_s']} | {gb:.2f} | {mcell} |")
 
     # CASCADE invariant check: forward graphs with zero all-reduce bytes
     print("\n## CASCADE zero-partial-sum invariant (faithful preset)\n")

@@ -89,6 +89,18 @@ def roofline_cell(arch_id: str, shape_name: str, mesh=None, tp_policy: str = "ca
                       "gradient sync, shrink activation gathers via sequence parallelism",
     }
 
+    if shape.kind == "decode":
+        # the Table 9/10 weight-streaming balance: a decode step cannot beat
+        # streaming the per-device state (FP4 weights + KV) from HBM once,
+        # so tokens/s <= global_batch / memory-term. benchmarks/report.py
+        # renders this bound next to the MEASURED decode throughput from
+        # results/bench_serving.json (the ROADMAP measured-vs-projection
+        # wiring; the measurement is CPU smoke-scale, the bound is the TPU
+        # projection — the column pairs them, it does not equate them).
+        rec["decode_bound_tokens_per_s"] = round(
+            shape.global_batch / max(t_memory, 1e-30), 2)
+        rec["weight_stream_bytes_per_device"] = state_bytes
+
     rec.update({
         "chips": chips,
         "dot_flops_per_device": flops_dev,

@@ -30,9 +30,20 @@ batched throughput is below X times slot-wise for any covered arch/batch
 ``--min-accept Y`` gates spec rows at >= Y accepted draft tokens per
 (slot, step) (CI runs this at 1.0).
 
+* ``mesh`` (``--mesh DxM``, typically with ``--host-devices 8``) — the
+  batched engine on a real ``NamedSharding`` mesh: params placed by
+  ``--tp-policy`` (cascade column-parallel by default), stacked caches
+  sharded on their slot axis over ``data``. Rows record the decode step's
+  **partial-sum all-reduce count** (``hlo_analysis.partial_sum_allreduces``)
+  and the run FAILS if a cascade-policy step contains any — the paper's
+  zero-partial-sum claim as a bench gate. Virtual CPU devices share the
+  same cores, so mesh rows measure placement overhead, not speedup; the
+  interconnect claim is the HLO column.
+
 Run: PYTHONPATH=src:. python -m benchmarks.serving \
         [--archs transformer moe griffin ssm] [--batches 2]
         [--min-speedup 1.5] [--spec] [--draft-len 4] [--min-accept 1.0]
+        [--mesh 4x2 --host-devices 8 --tp-policy cascade]
         [--out results/bench_serving.json]
 """
 from __future__ import annotations
@@ -87,7 +98,7 @@ SPEC_MAX_LEN = 1024
 
 
 def build_engine(family: str, mode: str, max_batch: int, draft_len: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128, mesh=None, tp_policy: str = "cascade"):
     from repro.core.cascade import CascadeConfig
     from repro.models import registry
     from repro.serve.engine import ServeConfig, ServeEngine
@@ -102,15 +113,18 @@ def build_engine(family: str, mode: str, max_batch: int, draft_len: int = 4,
         params = _force_constant_argmax(params)
     scfg = ServeConfig(max_batch=max_batch, max_len=max_len,
                        batched=(mode != "slotwise"), prefill_chunk=PROMPT_LEN,
-                       draft_len=(draft_len if mode == "spec" else 0))
-    return cfg, ServeEngine(model, params, ccfg, scfg)
+                       draft_len=(draft_len if mode == "spec" else 0),
+                       tp_policy=tp_policy)
+    return cfg, ServeEngine(model, params, ccfg, scfg,
+                            mesh=(mesh if mode == "mesh" else None))
 
 
 def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
-               max_len: int = 128) -> dict:
+               max_len: int = 128, mesh=None, tp_policy: str = "cascade") -> dict:
     from repro.serve.engine import Request
 
-    cfg, eng = build_engine(family, mode, max_batch, draft_len, max_len)
+    cfg, eng = build_engine(family, mode, max_batch, draft_len, max_len,
+                            mesh, tp_policy)
     rng = np.random.default_rng(0)
     pat = rng.integers(0, cfg.vocab, 4).astype(np.int32)
     for i in range(max_batch):
@@ -151,6 +165,13 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
     if mode == "spec":
         row["draft_len"] = m["draft_len"]
         row["accepted_per_step"] = round(m["accepted_per_step"], 2)
+    if mode == "mesh":
+        from benchmarks import hlo_analysis
+        ar = hlo_analysis.partial_sum_allreduces(eng.decode_step_hlo())
+        row["mesh"] = m["mesh"]
+        row["tp_policy"] = tp_policy
+        row["partial_sum_allreduces"] = ar["count"]
+        row["partial_sum_allreduce_bytes"] = ar["bytes"]
     return row
 
 
@@ -174,24 +195,54 @@ def main():
     ap.add_argument("--min-accept", type=float, default=0.0,
                     help="fail (exit 1) if the spec bench accepts fewer "
                          "drafted tokens per (slot, step) than this")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="also bench the sharded engine on a (data, model) "
+                         "host mesh, e.g. 4x2; cascade rows must show ZERO "
+                         "partial-sum all-reduce or the run fails")
+    ap.add_argument("--mesh-only", action="store_true",
+                    help="bench ONLY the mesh mode (no slotwise/batched "
+                         "sweeps): single-device modes measured on an "
+                         "oversubscribed virtual-device host would pollute "
+                         "the measured-vs-bound join, and the CI mesh leg "
+                         "only needs the AR gate + mesh row")
+    ap.add_argument("--tp-policy", default="cascade",
+                    choices=["cascade", "megatron"])
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N virtual CPU devices before first jax use")
     args = ap.parse_args()
+
+    if args.mesh_only and not args.mesh:
+        ap.error("--mesh-only requires --mesh")
+    if args.mesh_only and (args.spec or args.min_speedup > 0
+                           or args.min_accept > 0):
+        # never let a gate invocation exit green having skipped the gated
+        # benches — the single-device modes simply don't run under mesh-only
+        ap.error("--mesh-only skips the slotwise/batched/spec benches; it is "
+                 "incompatible with --spec/--min-speedup/--min-accept")
+
+    from repro.launch import mesh as meshlib
+    if args.host_devices:
+        meshlib.force_host_device_count(args.host_devices)
+    mesh = meshlib.make_serving_mesh(args.mesh) if args.mesh else None
 
     rows, failures = [], []
     for family in args.archs:
         for b in args.batches:
-            slot = bench_mode(family, "slotwise", b)
-            bat = bench_mode(family, "batched", b)
-            speedup = bat["tokens_per_s"] / max(slot["tokens_per_s"], 1e-9)
-            bat["speedup_vs_slotwise"] = slot["speedup_vs_slotwise"] = round(speedup, 2)
-            rows += [slot, bat]
-            print(f"{family:12s} b={b:2d}  "
-                  f"slotwise {slot['tokens_per_s']:9.1f} tok/s   "
-                  f"batched {bat['tokens_per_s']:9.1f} tok/s   "
-                  f"speedup {speedup:5.2f}x")
-            if args.min_speedup > 0 and speedup < args.min_speedup:
-                failures.append(f"{family} b={b}: {speedup:.2f}x "
-                                f"< {args.min_speedup:.2f}x")
-            if args.spec:
+            bat = None
+            if not args.mesh_only:
+                slot = bench_mode(family, "slotwise", b)
+                bat = bench_mode(family, "batched", b)
+                speedup = bat["tokens_per_s"] / max(slot["tokens_per_s"], 1e-9)
+                bat["speedup_vs_slotwise"] = slot["speedup_vs_slotwise"] = round(speedup, 2)
+                rows += [slot, bat]
+                print(f"{family:12s} b={b:2d}  "
+                      f"slotwise {slot['tokens_per_s']:9.1f} tok/s   "
+                      f"batched {bat['tokens_per_s']:9.1f} tok/s   "
+                      f"speedup {speedup:5.2f}x")
+                if args.min_speedup > 0 and speedup < args.min_speedup:
+                    failures.append(f"{family} b={b}: {speedup:.2f}x "
+                                    f"< {args.min_speedup:.2f}x")
+            if args.spec and not args.mesh_only:
                 sp = bench_mode(family, "spec", b, args.draft_len,
                                 max_len=SPEC_MAX_LEN)
                 # same-cache-size batched baseline: isolates the speculative
@@ -207,6 +258,21 @@ def main():
                     failures.append(
                         f"{family} b={b}: spec accepted/step "
                         f"{sp['accepted_per_step']:.2f} < {args.min_accept:.2f}")
+            if mesh is not None:
+                ms = bench_mode(family, "mesh", b, mesh=mesh,
+                                tp_policy=args.tp_policy)
+                if bat is not None:
+                    ms["speedup_vs_batched"] = round(
+                        ms["tokens_per_s"] / max(bat["tokens_per_s"], 1e-9), 2)
+                rows.append(ms)
+                print(f"{'':12s}       mesh     {ms['tokens_per_s']:9.1f} tok/s   "
+                      f"partial-sum AR {ms['partial_sum_allreduces']}   "
+                      f"({args.tp_policy})")
+                if args.tp_policy == "cascade" and ms["partial_sum_allreduces"]:
+                    failures.append(
+                        f"{family} b={b}: cascade decode step contains "
+                        f"{ms['partial_sum_allreduces']} partial-sum "
+                        "all-reduce(s) — CASCADE invariant violated")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -153,6 +153,11 @@ def expert_linear_init(key: jax.Array, n_experts: int, d_in: int, d_out: int,
 
 def expert_linear_apply(params: dict, x: jax.Array, cfg: CascadeConfig) -> jax.Array:
     """x: (E, C, d_in) -> (E, C, d_out); expert e uses its own weight."""
+    from repro.distributed.sharding import constrain_replicated
+    # CASCADE discipline mirrors linear_apply: the contraction input is
+    # replicated (activation broadcast) so column-sharded expert weights
+    # never emit a partial-sum all-reduce (no-op without a cascade policy)
+    x = constrain_replicated(x)
     if cfg.mode == "serve_fp4":
         w = jax.vmap(lambda c, s: quant.dequantize_weight(c, s, cfg.compute_dtype))(
             params["codes"], params["scale"])

@@ -7,14 +7,21 @@ inference; CASCADE eliminates them by making the **output-column dimension
 the unit of parallelism** and keeping every reduction local. On a TPU mesh:
 
 * ``cascade`` policy — every weight is sharded on its OUTPUT dim over
-  ``model``. Activations are all-gathered (linear in d_model) between
-  layers; **no all-reduce of partial sums exists anywhere in the graph**.
+  ``model`` — including expert weights, whose unit of parallelism is the
+  output column rather than the expert index. Activations are all-gathered
+  (linear in d_model) between layers; **no all-reduce of partial sums
+  exists anywhere in the graph**.
 * ``megatron`` policy — the classic pairing: first matmul column-sharded,
   second matmul row-sharded, followed by an all-reduce of partial sums
-  (quadratic-width accumulator traffic — what the paper abolishes).
+  (quadratic-width accumulator traffic — what the paper abolishes); expert
+  weights are expert-parallel (E over ``model``), the conventional MoE
+  layout.
 
 The dry-run roofline quantifies the collective-bytes difference between the
-two policies for every (arch x shape) cell.
+two policies for every (arch x shape) cell, and ``ServeEngine`` (see
+``serve/engine.py``) places live serving params with these same policies —
+the cascade decode step carries an executable zero-partial-sum-all-reduce
+assertion (``benchmarks/hlo_analysis.partial_sum_allreduces``).
 """
 from __future__ import annotations
 
@@ -38,7 +45,8 @@ def _leading_nones(n: int) -> tuple:
     return (None,) * n
 
 
-def spec_for_param(path: tuple[str, ...], leaf, policy: str, model_axis: str = "model"):
+def spec_for_param(path: tuple[str, ...], leaf, policy: str, model_axis: str = "model",
+                   tied_embed: bool = False):
     """PartitionSpec for one param leaf, by (module name, leaf name, ndim)."""
     names = [p for p in path]
     leaf_name = names[-1] if names else ""
@@ -48,15 +56,26 @@ def spec_for_param(path: tuple[str, ...], leaf, policy: str, model_axis: str = "
     def pad(spec: tuple) -> P:
         return P(*(_leading_nones(ndim - len(spec)) + spec))
 
-    # experts: (.., E, K, N) / codes (.., E, K//2, N) / scale (.., E, G, N)
+    # experts: (.., E, K, N) / codes (.., E, K//2, N) / scale (.., E, G, N).
+    # cascade shards the OUTPUT column N (the paper's unit of parallelism —
+    # every expert contraction stays local, combine is gather-only);
+    # megatron keeps conventional expert parallelism (E over model).
     if module in _EXPERT_MODULES:
         if ndim >= 3:
-            return P(*(_leading_nones(ndim - 3) + (model_axis, None, None)))
+            shard3 = ((model_axis, None, None) if policy == "megatron"
+                      else (None, None, model_axis))
+            return P(*(_leading_nones(ndim - 3) + shard3))
         return pad((None,))
 
     if leaf_name == "table":  # embedding (V, d)
-        return pad(("model" if policy == "megatron" else None, None)) if policy == "megatron" \
-            else pad((None, model_axis))
+        if policy == "megatron":
+            return pad((model_axis, None))
+        if tied_embed:
+            # tied head: logits = x @ table.T contracts over d — a d-sharded
+            # table would partial-sum the head matmul, so the table stays
+            # replicated (memory for zero interconnect, the CASCADE trade)
+            return pad((None, None))
+        return pad((None, model_axis))
 
     if module == "router":
         return pad((None, None))
@@ -91,11 +110,48 @@ def _path_names(path) -> tuple[str, ...]:
     return tuple(names)
 
 
-def param_specs(params_tree: Any, policy: str = "cascade", model_axis: str = "model"):
-    """PartitionSpec tree mirroring ``params_tree`` (arrays or SDS leaves)."""
+def param_specs(params_tree: Any, policy: str = "cascade", model_axis: str = "model",
+                tied_embed: bool = False):
+    """PartitionSpec tree mirroring ``params_tree`` (arrays or SDS leaves).
+
+    ``tied_embed`` marks archs whose lm_head is the embedding transpose
+    (mamba2, phi4): their table stays replicated under cascade so the tied
+    head matmul never contracts over a sharded dim.
+    """
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: spec_for_param(_path_names(path), leaf, policy, model_axis),
+        lambda path, leaf: spec_for_param(_path_names(path), leaf, policy,
+                                          model_axis, tied_embed),
         params_tree)
+
+
+def filter_divisible(specs_tree: Any, shapes_tree: Any, mesh):
+    """Drop mesh-axis names from dims the axis size does not divide.
+
+    Smoke-sized serving shapes (and batch-1 staging caches) routinely have
+    dims smaller than a mesh axis; replicating those leaves keeps placement
+    well-defined without per-arch divisibility bookkeeping.
+    """
+    def axis_size(name) -> int:
+        names = name if isinstance(name, tuple) else (name,)
+        n = 1
+        for a in names:
+            n *= mesh.shape.get(a, 1)
+        return n
+
+    def fix(leaf, spec):
+        parts = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        return P(*(name if name is not None and leaf.shape[i] % axis_size(name) == 0
+                   else None
+                   for i, name in enumerate(parts)))
+
+    return jax.tree.map(fix, shapes_tree, specs_tree)
+
+
+def named_shardings(mesh, specs_tree: Any):
+    """PartitionSpec tree -> NamedSharding tree (device_put placement)."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 def batch_specs(batch_tree: Any, batch_axes=("pod", "data"), mesh=None):
@@ -268,15 +324,40 @@ def constrain_attn_queries(x, seq_dim: int = 1):
 
 
 def constrain_expert_buffer(x):
-    """Constrain an (E, C, d) MoE dispatch/expert buffer to expert
-    parallelism (E over ``model``): the scatter from data-sharded tokens then
-    lowers to an all-to-all (tokens move once) instead of an all-reduce of
-    the whole buffer across data shards."""
+    """Constrain an (E, C, d) MoE dispatch/expert buffer.
+
+    Under ``cascade`` the buffer is REPLICATED (the paper's activation
+    broadcast, Section 13.4): expert weights are column-sharded, so every
+    expert contraction is local and the combine is gather-only. NOTE the
+    train-path caveat: building this buffer from data-SHARDED train tokens
+    still cross-shard-combines at the scatter — the documented MoE-dispatch
+    exception to the zero-partial-sum claim (an E-sharded buffer constraint
+    did not avoid it either, see models/moe_shardmap.py, which exists to
+    kill it; it would also now conflict with the column-sharded weights).
+    Serving paths replicate the tokens BEFORE the scatter (moe_ffn_apply
+    no_drop), so the invariant holds exactly where it is asserted. Other
+    policies keep expert parallelism (E over ``model``): the scatter from
+    data-sharded tokens then lowers to an all-to-all (tokens move once)
+    instead of an all-reduce of the whole buffer across data shards."""
     if _ACT_POLICY is None or _ACT_POLICY["policy"] == "none":
         return x
+    if _ACT_POLICY["policy"] in ("cascade", "fulldp"):
+        return constrain_replicated(x)
     if x.ndim != 3 or x.shape[0] % 16 != 0:
         return x
     return jax.lax.with_sharding_constraint(x, P("model", None, None))
+
+
+def constrain_replicated(x):
+    """Fully replicate an activation under the cascade policy (the CASCADE
+    activation broadcast): inputs to contractions that do NOT go through
+    ``cascade.linear_apply`` — attention q/k/v against a cache, the MoE
+    dispatch scatter at serving batch sizes — are pinned replicated so no
+    partial-sum all-reduce can be emitted downstream. No-op without an
+    installed cascade/fulldp policy (CPU tests, megatron baseline)."""
+    if _ACT_POLICY is None or _ACT_POLICY["policy"] not in ("cascade", "fulldp"):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*(None,) * x.ndim))
 
 
 def constrain_residual(x):

@@ -112,6 +112,10 @@ def build_step(arch_id: str, shape_name: str, ccfg: CascadeConfig,
     shape = cfgbase.SHAPES[shape_name]
     specs = cfgbase.input_specs(cfg, shape)
     batch_axes = ("pod", "data", "model") if full_dp else ("pod", "data")
+    # tied-embedding archs keep a replicated table under cascade: a
+    # d-sharded table would make the tied head contract over a sharded dim
+    # (a partial-sum all-reduce the policy forbids)
+    tied = cfg.tie_embeddings
 
     params_shape = jax.eval_shape(
         lambda: model.init_params(jax.random.PRNGKey(0), ccfg))
@@ -129,7 +133,7 @@ def build_step(arch_id: str, shape_name: str, ccfg: CascadeConfig,
         abstract = (state_shape, specs)
 
         def in_specs(mesh):
-            pspecs = shd.param_specs(params_shape, tp_policy)
+            pspecs = shd.param_specs(params_shape, tp_policy, tied_embed=tied)
             mspecs = pspecs
             if dp_shard in ("zero1", "fsdp"):
                 mspecs = shd.add_data_dim(pspecs, params_shape, mesh)
@@ -150,7 +154,7 @@ def build_step(arch_id: str, shape_name: str, ccfg: CascadeConfig,
         abstract = (params_shape, specs)
 
         def in_specs(mesh):
-            return (shd.param_specs(params_shape, tp_policy),
+            return (shd.param_specs(params_shape, tp_policy, tied_embed=tied),
                     shd.batch_specs(specs, mesh=mesh))
 
         return step_fn, abstract, in_specs
@@ -166,7 +170,7 @@ def build_step(arch_id: str, shape_name: str, ccfg: CascadeConfig,
     abstract = (params_shape, specs, cache_shape)
 
     def in_specs(mesh):
-        return (shd.param_specs(params_shape, tp_policy),
+        return (shd.param_specs(params_shape, tp_policy, tied_embed=tied),
                 shd.batch_specs(specs, mesh=mesh),
                 shd.cache_specs(cache_shape, mesh))
 

@@ -33,3 +33,56 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     assert n % model_parallel == 0
     return make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def force_host_device_count(n: int):
+    """Ask XLA for ``n`` host (CPU) devices, the CI/laptop stand-in for a
+    real accelerator mesh.
+
+    Sets (or raises) ``--xla_force_host_platform_device_count`` in
+    ``XLA_FLAGS``; jax reads the flag at backend init, so this must run
+    before the first device query. The function SELF-VERIFIES by counting
+    devices afterwards (initializing the backend, which the caller's mesh
+    construction was about to do anyway): if the count still falls short —
+    the backend was already up when we were called — it raises the
+    actionable set-it-before-starting error instead of letting mesh
+    construction fail with an opaque shape mismatch.
+    """
+    import os
+    import re
+    if n <= 1:
+        return
+    prev = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", prev)
+    if m is None:
+        os.environ["XLA_FLAGS"] = (
+            prev + f" --xla_force_host_platform_device_count={n}").strip()
+    elif int(m.group(1)) < n:
+        # a smaller inherited count would make the requested mesh unbuildable
+        os.environ["XLA_FLAGS"] = prev.replace(
+            m.group(0), f"--xla_force_host_platform_device_count={n}")
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"jax already initialized with {len(jax.devices())} device(s); "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} in "
+            "the environment before starting the process")
+
+
+def parse_mesh_shape(spec: str) -> tuple[int, int]:
+    """'4x2' -> (data=4, model=2); 'auto' splits the available devices into
+    (n // m, m) with the model axis as wide a power of two as divides n
+    (capped at 8 — serving TP beyond 8-way wants a real topology choice)."""
+    if spec == "auto":
+        n = len(jax.devices())
+        m = 1
+        while m < 8 and n % (m * 2) == 0:
+            m *= 2
+        return n // m, m
+    d, _, m = spec.partition("x")
+    return int(d), int(m)
+
+
+def make_serving_mesh(spec: str = "auto"):
+    """(data, model) host mesh for ``ServeEngine(..., mesh=...)``."""
+    data, model = parse_mesh_shape(spec)
+    return make_mesh((data, model), ("data", "model"))

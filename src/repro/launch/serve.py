@@ -1,7 +1,19 @@
-"""Serving launcher: FP4 weights, continuous batching, optional CREST.
+"""Serving launcher: FP4 weights, continuous batching, optional CREST,
+mesh-native sharded decode.
 
 CPU smoke:  PYTHONPATH=src python -m repro.launch.serve --arch olmoe-1b-7b \
                 --smoke --requests 16 --prompt-len 12 --max-new 8
+
+Host-mesh demo (8 virtual CPU devices, CASCADE column-parallel params +
+slot-sharded caches; token-exact with the single-device run):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b \
+        --smoke --requests 8 --max-batch 4 --host-devices 8 --mesh 4x2
+
+``--tp-policy megatron`` serves the row+column baseline (its decode step
+carries the partial-sum all-reduces CASCADE abolishes — compare with
+``--verify-hlo``, which prints the partial-sum all-reduce count of the
+compiled decode step and fails if a cascade-policy step has any).
 """
 from __future__ import annotations
 
@@ -35,9 +47,26 @@ def main():
                          "step (0 = off; greedy only)")
     ap.add_argument("--ngram-max", type=int, default=3,
                     help="longest suffix n-gram the prompt-lookup drafter matches")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N virtual CPU devices (must be set before "
+                         "first jax use; the CI/laptop stand-in for a mesh)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve on a (data, model) mesh, e.g. 4x2 ('auto' "
+                         "splits the available devices)")
+    ap.add_argument("--tp-policy", default="cascade",
+                    choices=["cascade", "megatron"],
+                    help="param placement when --mesh is set")
+    ap.add_argument("--verify-hlo", action="store_true",
+                    help="print the decode step's partial-sum all-reduce "
+                         "count; exit 1 if a cascade-policy step has any")
     args = ap.parse_args()
 
+    from repro.launch import mesh as meshlib
+    if args.host_devices:
+        meshlib.force_host_device_count(args.host_devices)
+
     import jax
+    mesh = meshlib.make_serving_mesh(args.mesh) if args.mesh else None
     cfg, model = registry.load(args.arch, smoke=args.smoke)
     compute = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
     train_ccfg = CascadeConfig(mode="train", compute_dtype=compute)
@@ -51,8 +80,32 @@ def main():
     scfg = ServeConfig(max_batch=args.max_batch,
                        max_len=args.prompt_len + args.max_new + 1,
                        temperature=args.temperature, top_k=args.top_k,
-                       draft_len=args.draft_len, ngram_max=args.ngram_max)
-    eng = ServeEngine(model, params, ccfg, scfg)
+                       draft_len=args.draft_len, ngram_max=args.ngram_max,
+                       tp_policy=args.tp_policy)
+    eng = ServeEngine(model, params, ccfg, scfg, mesh=mesh)
+
+    # never let "nothing was checked" look like "the invariant holds"
+    if args.verify_hlo and mesh is None:
+        print("--verify-hlo requires --mesh: a single-device decode step "
+              "has no collectives, so its zero verifies nothing")
+        raise SystemExit(2)
+    if args.verify_hlo and not eng.batched:
+        print("--verify-hlo requires the batched engine; this model fell "
+              "back to the slot-wise path, nothing was verified")
+        raise SystemExit(2)
+    if args.verify_hlo:
+        try:
+            from benchmarks import hlo_analysis
+        except ImportError:
+            print("--verify-hlo needs benchmarks/ on the path (run from the "
+                  "repo root)")
+            raise SystemExit(2)
+        ar = hlo_analysis.partial_sum_allreduces(eng.decode_step_hlo())
+        print(f"decode-step partial-sum all-reduces: {ar['count']} "
+              f"({ar['bytes']} B) under tp_policy={args.tp_policy}")
+        if args.tp_policy == "cascade" and ar["count"]:
+            print("CASCADE invariant VIOLATED", flush=True)
+            raise SystemExit(1)
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
@@ -70,9 +123,10 @@ def main():
     m = eng.metrics()
     spec = (f", spec draft_len={m['draft_len']} "
             f"accepted/step={m['accepted_per_step']:.2f}" if m["spec"] else "")
+    mstr = (f", mesh={m['mesh']} tp={m['tp_policy']}" if m["mesh"] else "")
     print(f"served {args.requests} requests, {total} tokens in {dt:.2f}s "
           f"({total / max(dt, 1e-9):.1f} tok/s), p99 step {eng.straggler_p99()*1e3:.1f} ms, "
-          f"batched={m['batched']}{spec}, admission wait {m['admission_wait_s_mean']*1e3:.1f} ms")
+          f"batched={m['batched']}{spec}{mstr}, admission wait {m['admission_wait_s_mean']*1e3:.1f} ms")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.tokens_out}")
 

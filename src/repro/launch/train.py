@@ -56,7 +56,8 @@ def main():
     state = train_loop.init_state(model, ccfg, opt)
     start_step = 0
     if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
-        pspecs = shd.param_specs(state.params, args.tp_policy)
+        pspecs = shd.param_specs(state.params, args.tp_policy,
+                                 tied_embed=cfg.tie_embeddings)
         shardings = train_loop.TrainState(
             params=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                                 is_leaf=lambda x: isinstance(x, P)),

@@ -20,6 +20,7 @@ from typing import Any, Callable, List
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import PartitionSpec as P
 
 #: probe shapes — small enough to be free, distinct enough to be unambiguous
 _PROBE_BATCHES = (2, 3)
@@ -45,6 +46,28 @@ def probe_slot_axes(init_cache: Callable[..., Any], probe_len: int = _PROBE_LEN)
         return diffs[0]
 
     return jax.tree.map(axis_of, small, big)
+
+
+def slot_pspecs(spec: Any, cache: Any, mesh, data_axis: str = "data") -> Any:
+    """PartitionSpec tree placing each leaf's probe-discovered SLOT axis over
+    ``data_axis`` (mesh-native serving: every data shard owns a contiguous
+    band of decode slots, so batched decode never moves cache state).
+
+    Leaves whose slot extent the data axis does not divide (batch-1 staging
+    caches, odd grids) fall back to replication — placement stays
+    well-defined for any ``max_batch``. All non-slot dims are replicated:
+    weights are the ``model``-sharded tensors in serving; slot state shards
+    only by request.
+    """
+    size = mesh.shape.get(data_axis, 1) if mesh is not None else 1
+
+    def one(ax, leaf):
+        parts = [None] * leaf.ndim
+        if size > 1 and leaf.shape[ax] % size == 0:
+            parts[ax] = data_axis
+        return P(*parts)
+
+    return jax.tree.map(one, spec, cache)
 
 
 def stack_caches(spec: Any, caches: List[Any]) -> Any:
@@ -210,3 +233,14 @@ class StackedCacheMixin:
 
     def write_cache(self, cache, sub, i):
         return write_cache(self._slot_spec(), cache, sub, i)
+
+    def cache_pspecs(self, cache, mesh, data_axis: str = "data"):
+        """Mesh placement for a stacked cache: slot axis over ``data_axis``.
+
+        Inherited by every registry family — dense KV, MLA latents,
+        ring+recurrent, conv/SSD — because the slot axes are probed, not
+        hand-annotated. The serving engine uses this both to ``device_put``
+        the initial grid and to pin the cache output sharding inside its
+        jitted decode/extend/verify/rewind steps.
+        """
+        return slot_pspecs(self._slot_spec(), cache, mesh, data_axis)

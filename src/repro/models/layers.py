@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import cascade
 from repro.core.cascade import CascadeConfig
-from repro.distributed.sharding import constrain_attn_queries
+from repro.distributed.sharding import constrain_attn_queries, constrain_matmul_input
 
 
 # ---------------------------------------------------------------------------
@@ -29,6 +29,13 @@ def norm_init(d: int, norm_type: str = "rmsnorm") -> dict:
 
 
 def norm_apply(params: dict, x: jax.Array, norm_type: str = "rmsnorm", eps: float = 1e-6) -> jax.Array:
+    # CASCADE: norms sit at the between-layers boundary where activations
+    # are gathered (paper Section 13.4) — pin features replicated so the
+    # mean/variance reduction is local. Without this, GSPMD can let a
+    # column-sharded branch output win the residual-add sharding and the
+    # feature reduction becomes a (scalar, but nonzero) partial-sum
+    # all-reduce. No-op without an installed cascade policy.
+    x = constrain_matmul_input(x)
     xf = x.astype(jnp.float32)
     if norm_type == "layernorm":
         mu = jnp.mean(xf, axis=-1, keepdims=True)
@@ -252,6 +259,16 @@ def attn_apply(
     if mode in ("decode", "extend"):
         assert cache is not None
         assert mode == "extend" or s == 1
+        # CASCADE serving layout: q/k/v keep batch over data with features
+        # replicated over model. Without this pin, GSPMD may carry the
+        # column-sharded projection output through the (b,s,H*hd)->(b,s,H,hd)
+        # reshape onto the HEAD dim (n_kv_heads=1 ring caches force it onto
+        # head_dim), and the score contraction over a sharded head_dim would
+        # emit exactly the partial-sum all-reduce the policy abolishes.
+        # No-op without an installed cascade policy.
+        q = constrain_matmul_input(q)
+        k = constrain_matmul_input(k)
+        v = constrain_matmul_input(v)
         pos = pos_rows(cache["pos"], b)                 # (B,) next write index
         t = cache["k"].shape[1]
         nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)

@@ -22,7 +22,10 @@ from jax import lax
 from repro.core import cascade
 from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import constrain_expert_buffer, constrain_residual
+from repro.distributed.sharding import (constrain_expert_buffer,
+                                        constrain_matmul_input,
+                                        constrain_replicated,
+                                        constrain_residual)
 from repro.models import layers as L
 from repro.models.cache_utils import (StackedCacheMixin, seq_rows_restore,
                                       seq_rows_snapshot, take_last_valid)
@@ -77,6 +80,13 @@ def moe_ffn_apply(params: dict, x: jax.Array, cfg: ArchConfig, ccfg: CascadeConf
     k, e = cfg.moe_top_k, cfg.n_experts
     cap = (-(-t // 8) * 8) if no_drop else _capacity(t, cfg)
     xf = x.reshape(t, d)
+    if no_drop:
+        # serving (decode/extend) token counts are tiny: replicate them over
+        # the mesh before the dispatch scatter so the buffer is built locally
+        # on every shard — no cross-shard scatter-add, hence no partial-sum
+        # all-reduce in the cascade decode step (no-op without a mesh policy;
+        # train keeps data-sharded tokens and the documented dispatch reduce)
+        xf = constrain_replicated(xf)
 
     logits = jnp.dot(xf.astype(jnp.float32), params["router"])       # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -92,7 +102,21 @@ def moe_ffn_apply(params: dict, x: jax.Array, cfg: ArchConfig, ccfg: CascadeConf
     dst = jnp.where(keep, flat_e * cap + pos_in_e, e * cap)           # OOB = dropped
 
     xk = jnp.repeat(xf, k, axis=0)                                    # (T*k, d) token-major
-    buf = jnp.zeros((e * cap, d), xf.dtype).at[dst].add(xk, mode="drop")
+    if no_drop and xk.shape[0] * e * cap <= (1 << 22):
+        # one-hot dot dispatch for serving-sized token counts: in no_drop
+        # mode every assignment owns a UNIQUE buffer row (capacity = t,
+        # distinct experts per token), so this is bitwise the scatter below
+        # (each output row sums one real value and exact zeros) — but GSPMD
+        # provably keeps a dot over replicated operands local, whereas it
+        # may partition the scatter-add over data shards and recombine with
+        # exactly the partial-sum all-reduce the cascade decode step must
+        # not contain. Big chunked-prefill dispatches (where the one-hot
+        # would not fit) keep the scatter.
+        xk = constrain_replicated(xk)
+        sel = jax.nn.one_hot(dst, e * cap, dtype=xk.dtype)            # (T*k, E*C)
+        buf = constrain_replicated(jnp.einsum("te,td->ed", sel, xk))
+    else:
+        buf = jnp.zeros((e * cap, d), xf.dtype).at[dst].add(xk, mode="drop")
     buf = constrain_expert_buffer(buf.reshape(e, cap, d))
 
     h = jax.nn.silu(cascade.expert_linear_apply(params["wg"], buf, ccfg).astype(jnp.float32))
@@ -143,6 +167,15 @@ def _mla_qkr(params, x, cfg, ccfg, positions):
     kv = cascade.linear_apply(params["wkv_a"], x, ccfg)
     c_kv = L.norm_apply(params["kv_norm"], kv[..., : cfg.kv_lora])
     k_rope = kv[..., cfg.kv_lora:][:, :, None, :]                     # (b,s,1,rope)
+    # CASCADE pin (see layers.attn_apply): these are column-sharded
+    # projection slices; carried sharded into rope, the concatenate of the
+    # rotated halves lowers to a masked cross-shard add, and the score
+    # contractions would split. Batch stays over data, features replicate.
+    # No-op without an installed cascade policy.
+    q_nope = constrain_matmul_input(q_nope)
+    q_rope = constrain_matmul_input(q_rope)
+    c_kv = constrain_matmul_input(c_kv)
+    k_rope = constrain_matmul_input(k_rope)
     inv = L.rope_freqs(cfg.qk_rope_dim, cfg.rope_theta, 1.0)
     q_rope = L.apply_rope(q_rope, positions, inv)
     k_rope = L.apply_rope(k_rope, positions, inv)[:, :, 0, :]

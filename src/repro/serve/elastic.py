@@ -22,6 +22,16 @@ the replica-set controller used by the serving example:
 * **straggler mitigation**: requests on a replica whose p99 step latency
   exceeds ``straggler_factor`` x the fleet median are eligible for
   speculative re-dispatch to the fastest healthy replica.
+
+**Shard-awareness**: replicas may run on their own device meshes — a
+``ServeEngine(..., mesh=...)`` next to unsharded engines, or engines on
+different mesh shapes / TP policies. The failover carry is pure host-side
+token state (``prompt + tokens_out``), never device state, so a rebuilt
+request admits into ANY survivor: its chunked re-prefill reconstructs the
+cache under the survivor's own ``NamedSharding`` placement (the sharded
+slot grid of the dead replica simply becomes garbage, exactly like the
+single-device case). Killing a sharded replica onto an unsharded survivor
+— and the reverse — is token-exact (``tests/test_sharding.py``).
 """
 from __future__ import annotations
 
@@ -103,12 +113,13 @@ class ReplicaSet:
     def kill_replica(self, i: int):
         """Simulate a hard replica loss; re-queue its in-flight work.
 
-        Works for both engine modes and every cache family:
-        ``abort_in_flight`` frees the slot grid (batched mode: the
-        stacked-cache slots simply become garbage) and ``rebuild_request``
-        reconstructs decode state — full-attention KV, ring-buffer KV or
-        recurrent {conv, h}/{conv, ssd} — from the prompt + emitted
-        tokens on a survivor."""
+        Works for both engine modes, every cache family, and any mesh
+        placement: ``abort_in_flight`` frees the slot grid (batched mode:
+        the stacked-cache slots — sharded or not — simply become garbage)
+        and ``rebuild_request`` reconstructs decode state — full-attention
+        KV, ring-buffer KV or recurrent {conv, h}/{conv, ssd} — from the
+        prompt + emitted tokens on a survivor, under the survivor's own
+        sharding."""
         self.health[i].alive = False
         eng = self.engines[i]
         for req in eng.abort_in_flight():

@@ -30,6 +30,22 @@ streams backed by ONE stacked, fixed-shape KV cache pytree. Each step:
    retirement are cache-slot writes, so nothing ever recompiles as traffic
    comes and goes.
 
+**Mesh-native serving** (paper Sections 2.2, 13.5): pass ``mesh=`` (a
+``(data, model)`` jax mesh) and the whole batched serving stack — decode,
+chunked prefill, spec-verify, rewind — runs under ``NamedSharding``: params
+are placed by the ``tp_policy`` (``cascade`` column-parallel, the paper's
+layout, or the ``megatron`` row+column baseline) via
+``distributed.sharding.param_specs``, and the stacked cache shards its
+probe-discovered slot axis over ``data`` (``cache_pspecs`` — every data
+shard owns a band of decode slots). Under the cascade policy the decode
+step contains **zero partial-sum all-reduce** — activations are broadcast,
+weights are column-sharded, reductions stay local — and
+``decode_step_hlo()`` exposes the compiled HLO so
+``benchmarks/hlo_analysis.partial_sum_allreduces`` can assert the paper's
+headline interconnect claim as an executable test. The sharded path is
+token-exact with the single-device path (contractions never split, so
+accumulation order is unchanged).
+
 Every registry arch family runs the batched fast path over its own cache
 state:
 
@@ -49,8 +65,10 @@ they never retire on a context limit. ``batched=False`` keeps the legacy
 slot-wise loop as the parity baseline; multi-codebook heads (musicgen)
 remain slot-wise. Decoding is greedy argmax by default; ``temperature`` /
 ``top_k`` switch on (deterministic, seeded) sampling — drawn ON DEVICE
-(``jax.random.categorical`` inside the jitted step) for the batched grid,
-host-side for the batch-1 admission/slot-wise paths. Speculation is
+everywhere (``jax.random.categorical`` fused into the jitted step for the
+batched grid; a jitted single-row draw for the admission and slot-wise
+paths) under ONE shared RNG discipline: draw i uses
+``fold_in(PRNGKey(sample_seed), i)`` regardless of mode. Speculation is
 greedy-only (sampling disables it). ``elastic.py`` handles replica failure
 by re-queueing in-flight requests (decode state — including recurrent
 state — is reconstructible from the prompt + emitted tokens; ``tokens_out``
@@ -59,6 +77,7 @@ unaccepted draft).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -70,6 +89,7 @@ import numpy as np
 
 from repro.core import crest
 from repro.core.cascade import CascadeConfig
+from repro.distributed import sharding as shd
 from repro.serve.spec import ngram_propose
 
 #: methods a model must expose for the batched (stacked-cache) fast path
@@ -87,9 +107,12 @@ def _sample_tokens(logits, key, temperature: float, top_k: int):
 
     Each row's draw is a pure function of (key, row index): the Gumbel
     noise is positional, so an active slot's sample never depends on what
-    garbage the inactive slots hold.
+    garbage the inactive slots hold. Under a cascade mesh policy the row is
+    pinned replicated first (one small all-gather): top-k and the Gumbel
+    add over a vocab-sharded row would otherwise lower to a partial-sum
+    all-reduce, breaking the zero-AR invariant for sampled serving.
     """
-    x = logits.astype(jnp.float32) / temperature
+    x = shd.constrain_replicated(logits).astype(jnp.float32) / temperature
     if 0 < top_k < x.shape[-1]:
         kth = jax.lax.top_k(x, top_k)[0][:, -1][:, None]
         x = jnp.where(x < kth, -jnp.inf, x)
@@ -136,6 +159,10 @@ class ServeConfig:
                                   # drafter tries to match (see serve/spec.py)
     ngram_lookback: int = 512     # drafter scans at most this many trailing
                                   # context tokens (bounds per-step host work)
+    tp_policy: str = "cascade"    # param placement when a mesh is passed:
+                                  # 'cascade' (column-parallel, zero partial-
+                                  # sum all-reduce) or 'megatron' (row+column
+                                  # baseline with the classic all-reduce)
 
 
 @dataclasses.dataclass
@@ -148,11 +175,18 @@ class _Staging:
 
 
 class ServeEngine:
-    def __init__(self, model, params, ccfg: CascadeConfig, scfg: ServeConfig):
+    def __init__(self, model, params, ccfg: CascadeConfig, scfg: ServeConfig,
+                 mesh=None):
         self.model = model
         self.params = params
         self.ccfg = ccfg
         self.scfg = scfg
+        self.mesh = mesh
+        self.tp_policy = scfg.tp_policy
+        # the cascade policy installs the activation-broadcast discipline
+        # (constrain_* hooks in model code); megatron is the measured GSPMD
+        # baseline — no constraints, the partitioner emits its all-reduces
+        self._act_policy = "cascade" if scfg.tp_policy == "cascade" else "none"
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * scfg.max_batch
         self.crest_state = None
@@ -165,7 +199,16 @@ class ServeEngine:
         self._retired: List[Request] = []
         self._rejected = 0
         self._staging: Optional[_Staging] = None
-        self._rng = np.random.default_rng(scfg.sample_seed)
+        # ONE on-device RNG discipline for every sampling site (batched grid,
+        # admission, slot-wise loop): draw i uses fold_in(PRNGKey(seed), i),
+        # so all modes are deterministic given seed + draw order and no
+        # logits row is ever copied to host just to sample it
+        self._sample_key = jax.random.PRNGKey(scfg.sample_seed)
+        self._sample_step = 0
+        if scfg.temperature > 0.0:
+            self._pick_fn = jax.jit(
+                lambda row, key: _sample_tokens(row[None, :], key,
+                                                scfg.temperature, scfg.top_k)[0])
         self._accepted_drafts = 0     # drafted tokens the verify pass accepted
         self._spec_slot_steps = 0     # (slot, step) pairs that ran speculation
         # per-slot draft context, appended incrementally as tokens commit
@@ -193,6 +236,10 @@ class ServeEngine:
             self._draft_len = (min(scfg.draft_len, window - 1) if window
                                else scfg.draft_len)
         self.spec = self._draft_len > 0
+        if mesh is not None and not self.batched:
+            raise ValueError(
+                "mesh serving requires the batched stacked-cache path "
+                "(batched=True and a model exposing write_cache/prefill_extend)")
         if self.batched:
             # round the cache length up to a chunk multiple so padded chunk
             # writes never clamp into (and clobber) valid cache entries; a
@@ -207,31 +254,71 @@ class ServeEngine:
             self._chunk_cap = window
             self.cache = model.init_cache(scfg.max_batch, self._cache_len, dtype=kv_dtype)
             self.caches: List[Any] = []   # unused in batched mode
-            self._decode_fn = jax.jit(
-                lambda p, t, c_: model.decode_step(p, {"tokens": t}, c_, ccfg),
-                donate_argnums=(2,))
+            if mesh is not None:
+                # data parallelism only when the slot grid divides the data
+                # axes: otherwise activations stay batch-replicated to match
+                # the (necessarily replicated) cache — unevenly batch-sharded
+                # k/v written into a replicated cache would lower to exactly
+                # the masked-add all-reduces the cascade policy forbids
+                dsize = 1
+                for a in ("pod", "data"):
+                    dsize *= mesh.shape.get(a, 1)
+                self._batch_axes = (("pod", "data")
+                                    if dsize > 1 and scfg.max_batch % dsize == 0
+                                    else ())
+                # params placed by the TP policy (tied-embedding archs keep
+                # a replicated table so the tied head never contracts over a
+                # sharded dim); stacked cache shards its slot axis over data
+                tied = bool(getattr(getattr(model, "cfg", None),
+                                    "tie_embeddings", False))
+                pspecs = shd.filter_divisible(
+                    shd.param_specs(params, scfg.tp_policy, tied_embed=tied),
+                    params, mesh)
+                self.params = jax.device_put(params, shd.named_shardings(mesh, pspecs))
+                self._cache_pspecs = model.cache_pspecs(self.cache, mesh)
+                self.cache = jax.device_put(
+                    self.cache, shd.named_shardings(mesh, self._cache_pspecs))
+                # pin cache outputs inside every jitted step so the slot-axis
+                # placement survives donation round-trips (GSPMD propagation
+                # alone is not guaranteed to hand the sharding back)
+                pin = lambda c_: jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                    c_, self._cache_pspecs)
+            else:
+                pin = lambda c_: c_
+            self._pin = pin
+
+            def _decode_step(p, t, c_):
+                logits, c2 = model.decode_step(p, {"tokens": t}, c_, ccfg)
+                return logits, pin(c2)
+
+            self._decode_fn = jax.jit(_decode_step, donate_argnums=(2,))
             self._extend_fn = jax.jit(
                 lambda p, t, c_, n: model.prefill_extend(p, {"tokens": t}, c_, ccfg,
                                                          n_valid=n),
                 donate_argnums=(2,))
-            self._write_fn = jax.jit(model.write_cache, donate_argnums=(0,))
+            self._write_fn = jax.jit(
+                lambda c_, s_, i: pin(model.write_cache(c_, s_, i)),
+                donate_argnums=(0,))
             if self.spec:
-                self._verify_fn = jax.jit(
-                    lambda p, t, c_: model.spec_verify(p, {"tokens": t}, c_, ccfg),
-                    donate_argnums=(2,))
+                def _verify_step(p, t, c_):
+                    logits, c2, ckpt = model.spec_verify(p, {"tokens": t}, c_, ccfg)
+                    return logits, pin(c2), ckpt
+
+                self._verify_fn = jax.jit(_verify_step, donate_argnums=(2,))
                 # donate only the cache: checkpoint leaves have chunk-sized
                 # shapes no output can reuse (donating them just warns)
-                self._rewind_fn = jax.jit(model.spec_rewind, donate_argnums=(0,))
+                self._rewind_fn = jax.jit(
+                    lambda c_, ck, keep: pin(model.spec_rewind(c_, ck, keep)),
+                    donate_argnums=(0,))
             if scfg.temperature > 0.0:
                 # on-device sampling for the batched grid: decode + categorical
                 # draw fused in one jitted step (no per-step host vocab copy)
                 def _sampled_step(p, t, c_, key):
                     logits, c2 = model.decode_step(p, {"tokens": t}, c_, ccfg)
                     return _sample_tokens(logits[:, -1], key, scfg.temperature,
-                                          scfg.top_k), c2
+                                          scfg.top_k), pin(c2)
                 self._sample_fn = jax.jit(_sampled_step, donate_argnums=(2,))
-                self._sample_key = jax.random.PRNGKey(scfg.sample_seed)
-                self._sample_step = 0
         else:
             self._cache_len = scfg.max_len
             self._chunk_cap = 0
@@ -358,25 +445,21 @@ class ServeEngine:
     def _active(self):
         return [i for i, r in enumerate(self.slots) if r is not None]
 
+    def _next_sample_key(self):
+        """One counter for every sampling site: fold_in(seed, draw index)."""
+        key = jax.random.fold_in(self._sample_key, self._sample_step)
+        self._sample_step += 1
+        return key
+
     def _pick(self, row) -> int:
         """Next token from a (V,) logits row (admission / slot-wise path).
-        Greedy argmax stays on-device; only sampling pulls logits to host."""
+        Both argmax and sampling stay ON DEVICE — the admission and
+        slot-wise modes share the batched grid's seeded-categorical RNG
+        discipline (same fold_in counter), so no path ever copies a vocab
+        row to host or keeps a second host-side RNG stream."""
         if self.scfg.temperature <= 0.0:
             return int(jnp.argmax(row))
-        return int(self._sample_rows(np.asarray(row, np.float64)[None, :])[0])
-
-    def _sample_rows(self, x: np.ndarray) -> np.ndarray:
-        """(B, V) host logits -> (B,) temperature/top-k samples; one draw
-        per row, deterministic given ``sample_seed`` and draw order."""
-        x = x.astype(np.float64) / self.scfg.temperature
-        k = self.scfg.top_k
-        if 0 < k < x.shape[-1]:
-            kth = np.partition(x, -k, axis=-1)[:, -k][:, None]
-            x = np.where(x < kth, -np.inf, x)
-        x = x - x.max(axis=-1, keepdims=True)
-        p = np.exp(x)
-        p /= p.sum(axis=-1, keepdims=True)
-        return np.asarray([self._rng.choice(p.shape[-1], p=row) for row in p])
+        return int(self._pick_fn(jnp.asarray(row), self._next_sample_key()))
 
     def _retire_if_done(self, req: Request, i: int, nxt: int):
         # cache usage: prompt + tokens emitted since (carried ones are
@@ -407,10 +490,9 @@ class ServeEngine:
             # on-device sampling: one fused decode+categorical dispatch; the
             # per-row Gumbel noise is positional (a function of key + slot
             # index), so active rows never depend on garbage-slot contents
-            key = jax.random.fold_in(self._sample_key, self._sample_step)
-            self._sample_step += 1
             sampled, self.cache = self._sample_fn(self.params, jnp.asarray(toks),
-                                                  self.cache, key)
+                                                  self.cache,
+                                                  self._next_sample_key())
             nxt = np.asarray(sampled)
         produced = 0
         for i in active:
@@ -489,22 +571,77 @@ class ServeEngine:
             self._retire_if_done(req, i, nxt)
         return produced
 
+    @contextlib.contextmanager
+    def _sharded_scope(self):
+        """Mesh + activation-policy scope for every on-device call.
+
+        Jit tracing happens lazily at first dispatch, so the mesh context
+        (bare-``PartitionSpec`` constraints need it) and the activation
+        policy (the ``constrain_*`` hooks inside model code) must surround
+        the CALLS, not the ``jax.jit`` constructions. The policy is cleared
+        on exit so an unsharded engine in the same process — a failover
+        survivor, the slot-wise parity baseline — never traces under a
+        leftover mesh discipline.
+        """
+        if self.mesh is None:
+            yield
+            return
+        shd.set_activation_policy(self.mesh, self._act_policy,
+                                  batch_axes=self._batch_axes)
+        try:
+            with self.mesh:
+                yield
+        finally:
+            shd.clear_activation_policy()
+
     def step(self) -> int:
         """One engine step; returns number of decode tokens produced."""
-        self._admit()
-        active = self._active()
-        if not active:
-            return 0
-        t0 = time.monotonic()
-        self._steps += 1
-        if self.scfg.crest_enabled and self._steps % self.scfg.crest_every == 0:
-            self._crest_probe()
-        produced = (self._decode_spec(active) if self.spec
-                    else self._decode_batched(active) if self.batched
-                    else self._decode_slotwise(active))
-        self.step_times.append(time.monotonic() - t0)
-        self._decode_tokens += produced
-        return produced
+        with self._sharded_scope():
+            self._admit()
+            active = self._active()
+            if not active:
+                return 0
+            t0 = time.monotonic()
+            self._steps += 1
+            if self.scfg.crest_enabled and self._steps % self.scfg.crest_every == 0:
+                self._crest_probe()
+            produced = (self._decode_spec(active) if self.spec
+                        else self._decode_batched(active) if self.batched
+                        else self._decode_slotwise(active))
+            self.step_times.append(time.monotonic() - t0)
+            self._decode_tokens += produced
+            return produced
+
+    def decode_step_hlo(self, which: str = "decode") -> str:
+        """Compiled HLO of a batched serving step against the live params/
+        cache placement — the executable form of the paper's interconnect
+        claim: under ``tp_policy='cascade'`` this text contains zero
+        partial-sum all-reduce (``benchmarks/hlo_analysis.
+        partial_sum_allreduces``), under ``megatron`` it does not.
+
+        ``which``: 'decode' (one-token step) or 'verify' (the speculative
+        (1+K)-position verify pass; requires ``draft_len > 0``). With
+        ``temperature > 0`` the 'decode' form lowers the FUSED sampled step
+        — the computation the engine actually dispatches — not the unused
+        greedy one.
+        """
+        assert self.batched, "decode_step_hlo requires the batched engine"
+        # a real (uncommitted) token array mirrors what step() dispatches,
+        # so the lowered cell is exactly the serving computation
+        if which == "verify":
+            assert self.spec, "verify HLO requires draft_len > 0"
+            toks = jnp.zeros((self.scfg.max_batch, self._draft_len + 1), jnp.int32)
+            with self._sharded_scope():
+                return (self._verify_fn.lower(self.params, toks, self.cache)
+                        .compile().as_text())
+        toks = jnp.zeros((self.scfg.max_batch, 1), jnp.int32)
+        with self._sharded_scope():
+            if self.scfg.temperature > 0.0:
+                key = jax.random.fold_in(self._sample_key, 0)
+                return (self._sample_fn.lower(self.params, toks, self.cache, key)
+                        .compile().as_text())
+            return (self._decode_fn.lower(self.params, toks, self.cache)
+                    .compile().as_text())
 
     # ------------------------------------------------------------- failover
     def evict(self, i: int) -> Optional[Request]:
@@ -560,6 +697,8 @@ class ServeEngine:
         total = float(st.sum()) if st.size else 0.0
         return {
             "batched": self.batched,
+            "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
+            "tp_policy": self.tp_policy if self.mesh is not None else None,
             "spec": self.spec,
             "draft_len": self._draft_len,
             "draft_tokens_accepted": self._accepted_drafts,
