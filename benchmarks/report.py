@@ -51,20 +51,32 @@ def main():
                                      "results/serving.json")
                          if os.path.exists(p)), None)
     rows = json.load(open(serving_path)) if serving_path else []
-    # the CI multi-device leg writes its --mesh rows to a sibling file so
-    # the single-device gate artifact stays byte-stable; merge if present
-    if os.path.exists("results/bench_serving_mesh.json"):
-        rows += json.load(open("results/bench_serving_mesh.json"))
+    # the CI multi-device and spec-sampling legs write their rows to sibling
+    # files so the single-device gate artifact stays byte-stable; merge any
+    # that are present
+    for extra in ("results/bench_serving_mesh.json",
+                  "results/bench_serving_sampled.json"):
+        if os.path.exists(extra):
+            rows += json.load(open(extra))
     if rows:
         print("\n## Serving decode throughput (benchmarks/serving.py)\n")
+        print("accepted/step for sampled spec rows is bounded by the model's "
+              "own probability mass on the drafts (uniform p on the zeroed "
+              "head => ceiling sum V^-j), not by the greedy ceiling K.\n")
         print("| family | batch | slotwise tok/s | batched tok/s | speedup "
               "| batched p99 step ms | spec tok/s | accepted/step | spec vs batched "
+              "| sampled-spec tok/s | accepted/step (T, V) "
               "| mesh tok/s | partial-sum AR |")
-        print("|" + "---|" * 11)
+        print("|" + "---|" * 13)
         by_key = {}
         for r in rows:
             key = (r.get("family", r.get("arch", "?")), r.get("max_batch", "?"))
-            by_key.setdefault(key, {})[r.get("mode", "?")] = r
+            # sampled spec rows (temperature > 0) render in their own
+            # columns; greedy spec rows keep the legacy 'spec' slot
+            mode = r.get("mode", "?")
+            if mode == "spec" and r.get("temperature", 0) > 0:
+                mode = "spec_sampled"
+            by_key.setdefault(key, {})[mode] = r
         # numeric batches sort numerically; legacy rows without max_batch
         # (non-int placeholder) sort after them
         for fam, b in sorted(by_key, key=lambda t: (
@@ -72,6 +84,7 @@ def main():
             s = by_key[(fam, b)].get("slotwise", {})
             k = by_key[(fam, b)].get("batched", {})
             p = by_key[(fam, b)].get("spec", {})
+            ps = by_key[(fam, b)].get("spec_sampled", {})
             m = by_key[(fam, b)].get("mesh", {})
             # the zero-partial-sum invariant, rendered per mesh row: 0 for
             # cascade is the paper's claim holding as a measurement
@@ -79,11 +92,18 @@ def main():
             mesh_tok = m.get("tokens_per_s", "—")
             if m:
                 mesh_tok = f"{mesh_tok} ({m.get('tp_policy', '?')})"
+            ps_acc = "—"
+            if ps:
+                ps_acc = (f"{ps.get('accepted_per_step', '—')} "
+                          f"(T={ps.get('temperature', '?')}, "
+                          f"V={ps.get('vocab', '?')})")
             print(f"| {fam} | {b} | {s.get('tokens_per_s','—')} "
                   f"| {k.get('tokens_per_s','—')} "
                   f"| {k.get('speedup_vs_slotwise','—')}x | {k.get('step_ms_p99','—')} "
                   f"| {p.get('tokens_per_s','—')} | {p.get('accepted_per_step','—')} "
-                  f"| {p.get('speedup_vs_batched','—')}x | {mesh_tok} | {ar} |")
+                  f"| {p.get('speedup_vs_batched','—')}x "
+                  f"| {ps.get('tokens_per_s','—')} | {ps_acc} "
+                  f"| {mesh_tok} | {ar} |")
 
     # ROADMAP wiring: measured decode tokens/s (CPU smoke models, serving
     # bench) next to the TPU weight-streaming bound from the roofline decode

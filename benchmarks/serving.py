@@ -20,6 +20,19 @@ sizes, in both engine modes:
   tests/test_spec.py parity suite guarantees correctness on arbitrary
   streams). Rows add ``accepted_per_step`` and ``speedup_vs_batched``.
 
+  With ``--temperature T > 0`` the spec rows run **speculative sampling**
+  instead. The zeroed head now gives a UNIFORM p over the vocab, so the
+  acceptance ceiling is a different number than greedy's K: sampled
+  acceptance commits a draft with probability p(draft) — the model's own
+  probability mass on it — not an argmax indicator, so per real draft the
+  accept probability is 1/V and the expected accepted/step ceiling is
+  ``sum_{j=1..K} V^-j ~= 1/V`` (the distribution-exactness guarantee is
+  exactly why: a drafter cannot be accepted more often than the model
+  itself would emit its proposals). To keep that ceiling measurable and
+  gateable the sampled spec rows (and their batched baseline) shrink the
+  vocab to ``SPEC_SAMPLED_VOCAB``; ``--min-accept`` then gates against the
+  analytic ceiling with CI-noise margin.
+
 Emits one JSON row per (arch, mode, batch) into ``--out`` in the same row
 style the roofline sweeps use (``arch``/``shape``/``status`` keys), so
 ``benchmarks/report.py`` renders it alongside the other tables.
@@ -43,6 +56,7 @@ batched throughput is below X times slot-wise for any covered arch/batch
 Run: PYTHONPATH=src:. python -m benchmarks.serving \
         [--archs transformer moe griffin ssm] [--batches 2]
         [--min-speedup 1.5] [--spec] [--draft-len 4] [--min-accept 1.0]
+        [--temperature 1.0]
         [--mesh 4x2 --host-devices 8 --tp-policy cascade]
         [--out results/bench_serving.json]
 """
@@ -96,16 +110,32 @@ def _force_constant_argmax(params: dict) -> dict:
 #: column is apples-to-apples (attention cost grows with the cache)
 SPEC_MAX_LEN = 1024
 
+#: vocab for the SAMPLED spec rows (and their batched baseline): the zeroed
+#: head gives uniform p, so sampled acceptance is Bernoulli(1/V) per draft
+#: and the analytic accepted/step ceiling is sum_{j=1..K} V^-j — at the
+#: greedy rows' vocab (2048) that is ~0.0005, unmeasurable in a short CI
+#: run; at 8 it is ~0.143, gateable with margin (see sampled_accept_ceiling)
+SPEC_SAMPLED_VOCAB = 8
+
+
+def sampled_accept_ceiling(vocab: int, draft_len: int) -> float:
+    """E[accepted drafts / slot-step] for uniform p and i.i.d. real drafts:
+    the leading-accept count of Bernoulli(1/V) trials, sum_{j=1..K} V^-j."""
+    return sum(vocab ** -j for j in range(1, draft_len + 1))
+
 
 def build_engine(family: str, mode: str, max_batch: int, draft_len: int = 4,
-                 max_len: int = 128, mesh=None, tp_policy: str = "cascade"):
+                 max_len: int = 128, mesh=None, tp_policy: str = "cascade",
+                 temperature: float = 0.0, vocab: int = 0):
     from repro.core.cascade import CascadeConfig
     from repro.models import registry
     from repro.serve.engine import ServeConfig, ServeEngine
 
     arch = registry.FAMILY_SMOKE[family]
-    cfg = dataclasses.replace(registry.get_config(arch, smoke=True),
-                              **FAMILY_DIMS[family])
+    dims = dict(FAMILY_DIMS[family])
+    if vocab:
+        dims["vocab"] = vocab
+    cfg = dataclasses.replace(registry.get_config(arch, smoke=True), **dims)
     model = registry.build_model(cfg)
     ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
     params = model.init_params(jax.random.PRNGKey(0), ccfg)
@@ -114,17 +144,18 @@ def build_engine(family: str, mode: str, max_batch: int, draft_len: int = 4,
     scfg = ServeConfig(max_batch=max_batch, max_len=max_len,
                        batched=(mode != "slotwise"), prefill_chunk=PROMPT_LEN,
                        draft_len=(draft_len if mode == "spec" else 0),
-                       tp_policy=tp_policy)
+                       temperature=temperature, tp_policy=tp_policy)
     return cfg, ServeEngine(model, params, ccfg, scfg,
                             mesh=(mesh if mode == "mesh" else None))
 
 
 def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
-               max_len: int = 128, mesh=None, tp_policy: str = "cascade") -> dict:
+               max_len: int = 128, mesh=None, tp_policy: str = "cascade",
+               temperature: float = 0.0, vocab: int = 0) -> dict:
     from repro.serve.engine import Request
 
     cfg, eng = build_engine(family, mode, max_batch, draft_len, max_len,
-                            mesh, tp_policy)
+                            mesh, tp_policy, temperature, vocab)
     rng = np.random.default_rng(0)
     pat = rng.integers(0, cfg.vocab, 4).astype(np.int32)
     for i in range(max_batch):
@@ -137,6 +168,8 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
     assert all(s is not None for s in eng.slots)
     if mode == "spec":
         assert eng.spec, "spec bench must take the speculative path"
+        want = "spec-sampled" if temperature > 0 else "spec-greedy"
+        assert eng.effective_mode == want, eng.effective_mode
     eng.step_times.clear()                  # drop trace/compile steps from p50/p99
     best_dt, produced = float("inf"), 0
     for _ in range(REPEATS):                # best-of-N: robust to CPU bursts
@@ -164,7 +197,10 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
     }
     if mode == "spec":
         row["draft_len"] = m["draft_len"]
-        row["accepted_per_step"] = round(m["accepted_per_step"], 2)
+        row["accepted_per_step"] = round(m["accepted_per_step"], 4)
+    if temperature > 0:
+        row["temperature"] = temperature
+        row["vocab"] = cfg.vocab
     if mode == "mesh":
         from benchmarks import hlo_analysis
         ar = hlo_analysis.partial_sum_allreduces(eng.decode_step_hlo())
@@ -194,7 +230,16 @@ def main():
                     help="drafted tokens per slot per step for --spec")
     ap.add_argument("--min-accept", type=float, default=0.0,
                     help="fail (exit 1) if the spec bench accepts fewer "
-                         "drafted tokens per (slot, step) than this")
+                         "drafted tokens per (slot, step) than this (with "
+                         "--temperature > 0 gate against the analytic "
+                         "sampled ceiling sum_{j<=K} V^-j, printed per row, "
+                         "not against the greedy ceiling K)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="run the spec rows (and their batched baseline) "
+                         "with sampled decoding — speculative SAMPLING at "
+                         "this temperature on a shrunken vocab "
+                         f"({SPEC_SAMPLED_VOCAB}) so the uniform-p "
+                         "acceptance ceiling stays measurable")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="also bench the sharded engine on a (data, model) "
                          "host mesh, e.g. 4x2; cascade rows must show ZERO "
@@ -205,6 +250,14 @@ def main():
                          "oversubscribed virtual-device host would pollute "
                          "the measured-vs-bound join, and the CI mesh leg "
                          "only needs the AR gate + mesh row")
+    ap.add_argument("--spec-only", action="store_true",
+                    help="bench ONLY the spec rows (plus their same-config "
+                         "batched baseline, which is measured but not "
+                         "emitted): skips the slotwise/batched sweeps so "
+                         "the CI spec-sampling leg neither re-times modes "
+                         "it does not gate nor emits greedy rows that "
+                         "would collide with the bench-gate artifact's in "
+                         "the report join")
     ap.add_argument("--tp-policy", default="cascade",
                     choices=["cascade", "megatron"])
     ap.add_argument("--host-devices", type=int, default=0,
@@ -219,6 +272,11 @@ def main():
         # benches — the single-device modes simply don't run under mesh-only
         ap.error("--mesh-only skips the slotwise/batched/spec benches; it is "
                  "incompatible with --spec/--min-speedup/--min-accept")
+    if args.spec_only and not args.spec:
+        ap.error("--spec-only requires --spec")
+    if args.spec_only and (args.mesh_only or args.min_speedup > 0):
+        ap.error("--spec-only skips the slotwise/batched sweeps; it is "
+                 "incompatible with --mesh-only/--min-speedup")
 
     from repro.launch import mesh as meshlib
     if args.host_devices:
@@ -229,7 +287,7 @@ def main():
     for family in args.archs:
         for b in args.batches:
             bat = None
-            if not args.mesh_only:
+            if not args.mesh_only and not args.spec_only:
                 slot = bench_mode(family, "slotwise", b)
                 bat = bench_mode(family, "batched", b)
                 speedup = bat["tokens_per_s"] / max(slot["tokens_per_s"], 1e-9)
@@ -243,25 +301,44 @@ def main():
                     failures.append(f"{family} b={b}: {speedup:.2f}x "
                                     f"< {args.min_speedup:.2f}x")
             if args.spec and not args.mesh_only:
+                # sampled spec runs on the shrunken vocab (see module
+                # docstring); its baseline matches it exactly — same vocab,
+                # same temperature — so the speedup column stays honest
+                svocab = SPEC_SAMPLED_VOCAB if args.temperature > 0 else 0
                 sp = bench_mode(family, "spec", b, args.draft_len,
-                                max_len=SPEC_MAX_LEN)
+                                max_len=SPEC_MAX_LEN,
+                                temperature=args.temperature, vocab=svocab)
                 # same-cache-size batched baseline: isolates the speculative
                 # gain from the longer grid's attention cost
-                bat_ref = bench_mode(family, "batched", b, max_len=SPEC_MAX_LEN)
+                bat_ref = bench_mode(family, "batched", b, max_len=SPEC_MAX_LEN,
+                                     temperature=args.temperature, vocab=svocab)
                 sp["speedup_vs_batched"] = round(
                     sp["tokens_per_s"] / max(bat_ref["tokens_per_s"], 1e-9), 2)
                 rows.append(sp)
+                extra = ""
+                if args.temperature > 0:
+                    ceil = sampled_accept_ceiling(SPEC_SAMPLED_VOCAB,
+                                                  args.draft_len)
+                    extra = (f"   [sampled T={args.temperature:g}, uniform-p "
+                             f"ceiling {ceil:.4f}]")
                 print(f"{'':12s}       spec     {sp['tokens_per_s']:9.1f} tok/s   "
-                      f"accepted/step {sp['accepted_per_step']:.2f}   "
-                      f"vs batched {sp['speedup_vs_batched']:5.2f}x")
+                      f"accepted/step {sp['accepted_per_step']:.4f}   "
+                      f"vs batched {sp['speedup_vs_batched']:5.2f}x{extra}")
                 if args.min_accept > 0 and sp["accepted_per_step"] < args.min_accept:
                     failures.append(
                         f"{family} b={b}: spec accepted/step "
-                        f"{sp['accepted_per_step']:.2f} < {args.min_accept:.2f}")
+                        f"{sp['accepted_per_step']:.4f} < {args.min_accept:.4f}")
             if mesh is not None:
+                # temperature threads through: the mesh row then measures
+                # (and AR-gates) the FUSED sampled decode step — the
+                # computation decode_step_hlo lowers at temperature > 0
                 ms = bench_mode(family, "mesh", b, mesh=mesh,
-                                tp_policy=args.tp_policy)
-                if bat is not None:
+                                tp_policy=args.tp_policy,
+                                temperature=args.temperature)
+                # only compare like with like: the single-device `bat`
+                # baseline is greedy, so a sampled mesh row gets no
+                # speedup column rather than a cross-mode ratio
+                if bat is not None and args.temperature == 0:
                     ms["speedup_vs_batched"] = round(
                         ms["tokens_per_s"] / max(bat["tokens_per_s"], 1e-9), 2)
                 rows.append(ms)

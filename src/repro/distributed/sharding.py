@@ -352,7 +352,11 @@ def constrain_replicated(x):
     """Fully replicate an activation under the cascade policy (the CASCADE
     activation broadcast): inputs to contractions that do NOT go through
     ``cascade.linear_apply`` — attention q/k/v against a cache, the MoE
-    dispatch scatter at serving batch sizes — are pinned replicated so no
+    dispatch scatter at serving batch sizes, and every logits row that
+    feeds sampling (the decode row AND the speculative verify pass's full
+    (B, K+1, V) row block: top-k / softmax / the Gumbel add / the
+    rejection-resampling acceptance over a vocab-sharded row would all
+    lower to partial-sum all-reduces) — are pinned replicated so no
     partial-sum all-reduce can be emitted downstream. No-op without an
     installed cascade/fulldp policy (CPU tests, megatron baseline)."""
     if _ACT_POLICY is None or _ACT_POLICY["policy"] not in ("cascade", "fulldp"):

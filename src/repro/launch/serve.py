@@ -44,7 +44,10 @@ def main():
                     help="restrict sampling to the k best logits (0 = all)")
     ap.add_argument("--draft-len", type=int, default=0,
                     help="speculative decode: K drafted tokens per slot per "
-                         "step (0 = off; greedy only)")
+                         "step (0 = off). Composes with --temperature: "
+                         "sampled serving runs speculative sampling "
+                         "(rejection resampling, distribution-exact with "
+                         "plain sampled decode)")
     ap.add_argument("--ngram-max", type=int, default=3,
                     help="longest suffix n-gram the prompt-lookup drafter matches")
     ap.add_argument("--host-devices", type=int, default=0,
@@ -106,6 +109,16 @@ def main():
         if args.tp_policy == "cascade" and ar["count"]:
             print("CASCADE invariant VIOLATED", flush=True)
             raise SystemExit(1)
+        if eng.spec:
+            # with --temperature > 0 this lowers the FUSED sampled
+            # verify+accept/resample step the engine actually dispatches
+            arv = hlo_analysis.partial_sum_allreduces(
+                eng.decode_step_hlo("verify"))
+            print(f"spec-verify partial-sum all-reduces: {arv['count']} "
+                  f"({arv['bytes']} B) under tp_policy={args.tp_policy}")
+            if args.tp_policy == "cascade" and arv["count"]:
+                print("CASCADE invariant VIOLATED (spec verify)", flush=True)
+                raise SystemExit(1)
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
@@ -124,6 +137,9 @@ def main():
     spec = (f", spec draft_len={m['draft_len']} "
             f"accepted/step={m['accepted_per_step']:.2f}" if m["spec"] else "")
     mstr = (f", mesh={m['mesh']} tp={m['tp_policy']}" if m["mesh"] else "")
+    print(f"mode={m['effective_mode']}"
+          + (f" (downgraded: {'; '.join(m['downgrades'])})"
+             if m["downgrades"] else ""))
     print(f"served {args.requests} requests, {total} tokens in {dt:.2f}s "
           f"({total / max(dt, 1e-9):.1f} tok/s), p99 step {eng.straggler_p99()*1e3:.1f} ms, "
           f"batched={m['batched']}{spec}{mstr}, admission wait {m['admission_wait_s_mean']*1e3:.1f} ms")

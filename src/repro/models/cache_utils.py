@@ -108,7 +108,13 @@ def take_last_valid(x: jax.Array, n_valid) -> jax.Array:
 # A verify pass runs the fixed-shape ``prefill_extend`` path over a
 # ``(B, 1+K)`` draft chunk with every token treated as real; acceptance is
 # only known afterwards, so the cache writes for the rejected suffix must be
-# rolled back per slot. Two leaf families, two mechanisms:
+# rolled back per slot. The primitives are ACCEPTANCE-RULE AGNOSTIC: greedy
+# argmax-prefix acceptance and speculative sampling (rejection resampling,
+# ``serve/engine.spec_sample_accept``) both hand them the same contract —
+# ``keep[b] = accepted drafts + 1`` chunk rows stay committed (the pending
+# token plus the accepted prefix; the bonus/resampled token is NOT in the
+# chunk — it becomes the next step's pending token), everything after rolls
+# back. Two leaf families, two mechanisms:
 #
 # * **seq-indexed buffers** (full/windowed KV, MLA latents, ring
 #   ``slot_pos``): snapshot the rows the chunk will overwrite BEFORE the

@@ -15,10 +15,22 @@ the replica-set controller used by the serving example:
   RG-LRU/conv state and SSD state are all deterministic functions of the
   token prefix, so the survivor's (chunked) re-prefill rebuilds them
   exactly — there is nothing replica-local to checkpoint. It also holds
-  mid-SPECULATION: ``tokens_out`` only ever contains tokens the verify
-  pass committed (accepted drafts + the bonus token — rejected drafts are
-  rolled back before the engine step returns), so the rebuilt prompt
-  carries exactly the client-visible stream and never an unverified draft,
+  mid-SPECULATION — greedy AND sampled: ``tokens_out`` only ever contains
+  tokens the verify/acceptance pass committed (accepted drafts + the
+  bonus/resampled token — rejected drafts are rolled back before the
+  engine step returns), so the rebuilt prompt carries exactly the
+  client-visible stream and never an unverified draft.
+
+  **RNG-counter caveat (sampled serving):** the fold_in draw counter is
+  engine-local state and is NOT carried by failover — the survivor
+  continues the stream with its own seed + counter, so the continuation's
+  draws DIFFER from the ones the dead replica would have made. That is by
+  design: already-emitted tokens are baked into the rebuilt prompt (never
+  re-drawn — the client's history is immutable), and every future token is
+  drawn from the same conditional distribution either way, so the
+  survivor's continuation is differently-realized but
+  distribution-identical. Only greedy streams are token-exact across a
+  failover,
 * **straggler mitigation**: requests on a replica whose p99 step latency
   exceeds ``straggler_factor`` x the fleet median are eligible for
   speculative re-dispatch to the fastest healthy replica.
@@ -55,7 +67,10 @@ def rebuild_request(req: Request) -> Request:
     carry is automatically accepted-tokens-only: the engine appends to
     ``tokens_out`` strictly after verification, so a replica dying between
     a verify pass and its rewind can never leak rejected drafts into the
-    rebuilt prompt. Retirement still fires at the
+    rebuilt prompt (greedy or sampled acceptance alike — under sampled
+    speculation the survivor's fresh RNG counter makes the continuation
+    differently-realized but distribution-identical, see the module
+    docstring). Retirement still fires at the
     ORIGINAL max_new_tokens since ``tokens_out`` carries over;
     ``prompt_carried`` records how many ``tokens_out`` entries the prompt
     now contains, so repeated failures never double-bake tokens.

@@ -18,13 +18,21 @@ streams backed by ONE stacked, fixed-shape KV cache pytree. Each step:
    request — the CASCADE batching analysis, Table 9/10); inactive slots
    compute masked garbage that never escapes. With ``draft_len > 0`` the
    step instead runs **speculative decode**: a model-free prompt-lookup
-   drafter (``serve/spec.py``) proposes K tokens per slot, ONE batched
-   verify pass (the fixed-shape ``prefill_extend`` path) scores all K+1
-   positions at once, the longest draft prefix matching the model's own
-   greedy argmax commits (plus the bonus token), and the rejected suffix
+   drafter (``serve/spec.py``) proposes up to K tokens per slot (reporting
+   the per-slot effective draft length ``k_eff`` — padding is never scored
+   as a proposal), ONE batched verify pass (the fixed-shape
+   ``prefill_extend`` path) scores all K+1 positions at once, accepted
+   tokens commit (plus a bonus/resampled token), and the rejected suffix
    rolls back through per-family cache rewind ops (``spec_rewind``) —
-   weight streaming is amortized over every accepted token, and the
-   emitted stream is token-exact with plain greedy decode;
+   weight streaming is amortized over every accepted token. Acceptance
+   depends on the decoding mode: under greedy the longest draft prefix
+   matching the model's own argmax commits, and the emitted stream is
+   token-exact with plain greedy decode; under sampling
+   (``temperature > 0``) the step runs **speculative sampling** (rejection
+   resampling, ``spec_sample_accept``) against the drafter's point-mass
+   proposal distribution, so every committed token is distributed EXACTLY
+   as plain sampled decode (distribution-exact, not token-exact — the
+   draws differ but the law does not);
 3. a CREST probe wave optionally shadow-tests the lm_head matmul;
 4. finished streams retire by simply freeing their slot — admission and
    retirement are cache-slot writes, so nothing ever recompiles as traffic
@@ -68,8 +76,13 @@ remain slot-wise. Decoding is greedy argmax by default; ``temperature`` /
 everywhere (``jax.random.categorical`` fused into the jitted step for the
 batched grid; a jitted single-row draw for the admission and slot-wise
 paths) under ONE shared RNG discipline: draw i uses
-``fold_in(PRNGKey(sample_seed), i)`` regardless of mode. Speculation is
-greedy-only (sampling disables it). ``elastic.py`` handles replica failure
+``fold_in(PRNGKey(sample_seed), i)`` regardless of mode — a speculative
+sampled step consumes exactly one counter value and derives its accept
+uniforms and resample/bonus Gumbel noise from it on device. Any mode
+downgrade (multi-codebook models dropping to the slot-wise grid, a model
+missing the spec API, slot-wise engines dropping speculation) warns once
+and is visible as ``metrics()['effective_mode']``. ``elastic.py`` handles
+replica failure
 by re-queueing in-flight requests (decode state — including recurrent
 state — is reconstructible from the prompt + emitted tokens; ``tokens_out``
 only ever holds verify-committed tokens, so a failover can never carry an
@@ -80,6 +93,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable, List, Optional
 
@@ -102,21 +116,109 @@ _BATCHED_API = ("write_cache", "prefill_extend")
 _SPEC_API = ("spec_verify", "spec_rewind")
 
 
+def _truncate_logits(logits, temperature: float, top_k: int):
+    """Temperature-scale + top-k-truncate logits; ``softmax`` of the result
+    is THE sampling distribution p every sampled path draws from.
+
+    Works on any ``(..., V)`` shape (decode rows are ``(B, V)``; the
+    speculative verify pass truncates all ``(B, K+1, V)`` rows at once —
+    acceptance must score drafts against the IDENTICAL truncated p that
+    plain decode samples from, or the committed distribution drifts).
+
+    **Tie semantics (documented, pinned by tests):** the truncated support
+    is VALUE-defined, not count-defined — every logit ``>= kth`` survives,
+    so a tie at the k-th logit keeps all tied candidates (more than k).
+    This makes the truncation a pure function of the logit values (no
+    arbitrary index-order tie-break that plain decode and the verify pass
+    could resolve differently), which is what distribution-exact
+    speculative sampling requires. Corollary: ``top_k=1`` equals greedy
+    only when the max is unique.
+
+    Under a cascade mesh policy the rows are pinned replicated first (one
+    small all-gather): top-k / softmax / the Gumbel add over a
+    vocab-sharded row would otherwise lower to a partial-sum all-reduce,
+    breaking the zero-AR invariant for sampled serving.
+    """
+    x = shd.constrain_replicated(logits).astype(jnp.float32) / temperature
+    if 0 < top_k < x.shape[-1]:
+        kth = jax.lax.top_k(x, top_k)[0][..., -1:]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    return x
+
+
 def _sample_tokens(logits, key, temperature: float, top_k: int):
     """(B, V) logits -> (B,) sampled token ids, entirely on device.
 
     Each row's draw is a pure function of (key, row index): the Gumbel
     noise is positional, so an active slot's sample never depends on what
-    garbage the inactive slots hold. Under a cascade mesh policy the row is
-    pinned replicated first (one small all-gather): top-k and the Gumbel
-    add over a vocab-sharded row would otherwise lower to a partial-sum
-    all-reduce, breaking the zero-AR invariant for sampled serving.
+    garbage the inactive slots hold.
     """
-    x = shd.constrain_replicated(logits).astype(jnp.float32) / temperature
-    if 0 < top_k < x.shape[-1]:
-        kth = jax.lax.top_k(x, top_k)[0][:, -1][:, None]
-        x = jnp.where(x < kth, -jnp.inf, x)
-    return jax.random.categorical(key, x, axis=-1)
+    return jax.random.categorical(
+        key, _truncate_logits(logits, temperature, top_k), axis=-1)
+
+
+#: large finite logit penalty used to zero the rejected draft's mass in the
+#: residual. Finite on purpose: if the residual is EMPTY (p was numerically
+#: a point mass on the draft, so every other logit is already -inf), the
+#: penalized draft still wins the categorical — which is the correct
+#: degenerate action, because an empty residual means the acceptance
+#: probability was 1 and the "rejection" was a measure-zero float artifact.
+_RESIDUAL_PENALTY = 1e30
+
+
+def spec_sample_accept(logits, drafts, k_eff, key, temperature: float,
+                       top_k: int):
+    """Speculative-sampling acceptance for a point-mass (delta) drafter.
+
+    Args: ``logits`` (B, K+1, V) verify-pass rows (row j conditions on the
+    cache prefix + chunk tokens 0..j); ``drafts`` (B, K) proposed tokens
+    (chunk tokens 1..K); ``k_eff`` (B,) real-proposal counts (positions
+    >= k_eff are padding and are force-rejected, never scored); ``key`` ONE
+    fold_in counter value — accept uniforms and the resample/bonus draw are
+    derived from it on device, positionally per slot.
+
+    Returns ``(a, token)``: ``a`` (B,) accepted draft counts and ``token``
+    (B,) the step's final committed token. The standard rule, specialized
+    to q = delta(d):
+
+    * accept draft d_j with probability ``min(1, p_j(d_j) / q_j(d_j))`` =
+      ``p_j(d_j)`` (q is a point mass, so the clamp never binds; p is the
+      truncated softmax ``_truncate_logits`` defines — identical to what
+      plain sampled decode draws from);
+    * first rejection at row a: resample from the residual
+      ``norm(max(0, p_a - q_a))`` — for a delta q that is p_a with the
+      rejected token's mass removed, i.e. a logit-space mask of d_a;
+    * all k_eff real drafts accepted: the bonus token is drawn from row
+      ``k_eff`` (NOT row K when k_eff < K — later rows condition on padded
+      tokens that were never proposed).
+
+    Marginal of the committed token at any row: ``p(d)·1[t=d] +
+    (1-p(d))·p(t)/(1-p(d)) = p(t)`` — exactly the plain sampled-decode
+    distribution, which is the tentpole's distribution-exactness argument
+    (enumerated per family by ``tests/test_spec.py``).
+    """
+    b, kp1, v = logits.shape
+    k = kp1 - 1
+    x = _truncate_logits(logits, temperature, top_k)        # (B, K+1, V)
+    logp = jax.nn.log_softmax(x, axis=-1)
+    # p_j(d_j): the truncated model probability of each draft token
+    p_draft = jnp.exp(jnp.take_along_axis(
+        logp[:, :k], drafts[..., None], axis=-1)[..., 0])   # (B, K)
+    key_u, key_t = jax.random.split(key)
+    u = jax.random.uniform(key_u, (b, k))
+    real = jnp.arange(k, dtype=jnp.int32)[None, :] < k_eff[:, None]
+    accept = (u < p_draft) & real
+    # leading-accept count: stop at the first rejection (or at k_eff)
+    a = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1), axis=-1)
+    # final row: the rejection row (a < k_eff) or the bonus row (a == k_eff)
+    row = jnp.take_along_axis(x, a[:, None, None], axis=1)[:, 0]  # (B, V)
+    rejected = a < k_eff
+    d_rej = jnp.take_along_axis(drafts, jnp.minimum(a, k - 1)[:, None],
+                                axis=1)[:, 0]               # (B,)
+    mask = (jnp.arange(v, dtype=jnp.int32)[None, :] == d_rej[:, None])
+    row = row - jnp.where(mask & rejected[:, None], _RESIDUAL_PENALTY, 0.0)
+    token = jax.random.categorical(key_t, row, axis=-1)
+    return a, token
 
 
 @dataclasses.dataclass
@@ -153,8 +255,11 @@ class ServeConfig:
     sample_seed: int = 0          # sampling is deterministic given seed + call order
     draft_len: int = 0            # speculative decode: K drafted tokens per slot
                                   # per step (0 = plain one-token decode; clamped
-                                  # to window-1 for ring-buffer archs; greedy
-                                  # only — temperature > 0 disables speculation)
+                                  # to window-1 for ring-buffer archs). Greedy
+                                  # uses argmax-prefix acceptance; temperature
+                                  # > 0 uses speculative SAMPLING (rejection
+                                  # resampling — distribution-exact with plain
+                                  # sampled decode)
     ngram_max: int = 3            # longest suffix n-gram the prompt-lookup
                                   # drafter tries to match (see serve/spec.py)
     ngram_lookback: int = 512     # drafter scans at most this many trailing
@@ -199,6 +304,31 @@ class ServeEngine:
         self._retired: List[Request] = []
         self._rejected = 0
         self._staging: Optional[_Staging] = None
+        # Sampled serving draws random bits INSIDE sharded jitted steps (the
+        # fused sampled decode step and the speculative verify+accept step).
+        # With the legacy non-partitionable threefry lowering, GSPMD
+        # generates DIFFERENT bits when it partitions a generation over the
+        # mesh, so a sharded engine's draws would silently diverge from the
+        # unsharded engine's — distribution-preserving but realization-
+        # breaking (irreproducible across mesh shapes). The partitionable
+        # implementation is sharding-invariant by contract and the default
+        # in newer jax; opt in for the older pinned versions. Scoped to
+        # sampled-engine construction (greedy engines never draw), BEFORE
+        # the key below is made, so unrelated code that merely imports this
+        # module keeps its RNG streams. It is still a PROCESS-GLOBAL jax
+        # flag — every sampled engine must share it (that is what the
+        # sharded-vs-unsharded parity contract requires), and any unrelated
+        # jax.random use in the same process re-bases its realizations too,
+        # so the flip is announced once instead of happening silently.
+        if (scfg.temperature > 0.0
+                and not jax.config.jax_threefry_partitionable):
+            warnings.warn(
+                "sampled serving enables jax_threefry_partitionable "
+                "(process-global): jax.random realizations drawn after this "
+                "point differ from the legacy lowering's; distributions and "
+                "seed-determinism are unaffected", RuntimeWarning,
+                stacklevel=3)
+            jax.config.update("jax_threefry_partitionable", True)
         # ONE on-device RNG discipline for every sampling site (batched grid,
         # admission, slot-wise loop): draw i uses fold_in(PRNGKey(seed), i),
         # so all modes are deterministic given seed + draw order and no
@@ -215,6 +345,16 @@ class ServeEngine:
         # (rebuilding prompt+emitted every step would be O(stream^2) host work)
         self._spec_ctx: List[Optional[list]] = [None] * scfg.max_batch
 
+        # Silent mode downgrades are a bug class of their own (a bench that
+        # thinks it measured speculation but ran plain decode): every
+        # downgrade warns ONCE (at construction) and is recorded so
+        # metrics()['effective_mode'] exposes the path that actually runs.
+        self.downgrades: List[str] = []
+
+        def _downgrade(msg: str):
+            self.downgrades.append(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
         # batched mode needs the stacked-cache API and flat logits
         # (multi-codebook heads only work slot-wise for now); every other
         # registry family — full/windowed attention, MLA, recurrent — runs
@@ -223,19 +363,35 @@ class ServeEngine:
         codebooks = getattr(getattr(model, "cfg", None), "n_codebooks", 0)
         self.batched = (scfg.batched and not codebooks
                         and all(hasattr(model, m) for m in _BATCHED_API))
+        if scfg.batched and not self.batched:
+            _downgrade(
+                "batched serving requested but this model "
+                + ("has a multi-codebook head" if codebooks
+                   else "lacks the stacked-cache API")
+                + " — falling back to the slot-wise decode loop")
         # windowed/recurrent archs hold O(window)/O(1) state: prompt length
         # is not bounded by the cache, and there is no context-limit retire
         self.ctx_unbounded = bool(getattr(model, "unbounded_context", False))
         kv_dtype = ccfg.resolved_kv_dtype
-        # speculative decode: greedy-only (acceptance compares against the
-        # model's own argmax), batched-only, and the (1+K) verify chunk must
-        # fit inside a ring buffer just like a prefill chunk
+        # speculative decode: batched-only, needs the verify/rewind API, and
+        # the (1+K) verify chunk must fit inside a ring buffer just like a
+        # prefill chunk. Greedy AND sampled serving both speculate — sampled
+        # acceptance runs rejection resampling (spec_sample_accept)
         self._draft_len = 0
-        if (self.batched and scfg.draft_len > 0 and scfg.temperature <= 0.0
-                and all(hasattr(model, m) for m in _SPEC_API)):
-            self._draft_len = (min(scfg.draft_len, window - 1) if window
-                               else scfg.draft_len)
+        if scfg.draft_len > 0:
+            if not self.batched:
+                _downgrade("draft_len > 0 requested but speculation needs "
+                           "the batched stacked-cache path — speculative "
+                           "decode disabled")
+            elif not all(hasattr(model, m) for m in _SPEC_API):
+                _downgrade("draft_len > 0 requested but this model lacks "
+                           "spec_verify/spec_rewind — speculative decode "
+                           "disabled")
+            else:
+                self._draft_len = (min(scfg.draft_len, window - 1) if window
+                                   else scfg.draft_len)
         self.spec = self._draft_len > 0
+        self._sampled = scfg.temperature > 0.0
         if mesh is not None and not self.batched:
             raise ValueError(
                 "mesh serving requires the batched stacked-cache path "
@@ -311,6 +467,21 @@ class ServeEngine:
                 self._rewind_fn = jax.jit(
                     lambda c_, ck, keep: pin(model.spec_rewind(c_, ck, keep)),
                     donate_argnums=(0,))
+                if self._sampled:
+                    # speculative SAMPLING: verify + accept/resample fused
+                    # in one jitted dispatch — the acceptance uniforms, the
+                    # residual resample and the bonus draw all stay on
+                    # device, derived from the step's single fold_in key
+                    def _spec_sampled_step(p, t, c_, keff, key):
+                        logits, c2, ckpt = model.spec_verify(
+                            p, {"tokens": t}, c_, ccfg)
+                        a, tok = spec_sample_accept(
+                            logits, t[:, 1:], keff, key,
+                            scfg.temperature, scfg.top_k)
+                        return a, tok, pin(c2), ckpt
+
+                    self._spec_sample_fn = jax.jit(_spec_sampled_step,
+                                                   donate_argnums=(2,))
             if scfg.temperature > 0.0:
                 # on-device sampling for the batched grid: decode + categorical
                 # draw fused in one jitted step (no per-step host vocab copy)
@@ -504,14 +675,25 @@ class ServeEngine:
         return produced
 
     def _decode_spec(self, active: List[int]) -> int:
-        """One speculative engine step: draft K tokens per slot (prompt
-        lookup over the slot's own stream), score all K+1 positions in ONE
-        batched verify pass, commit the longest draft prefix matching the
-        model's greedy argmax plus the bonus token, then rewind each slot's
-        cache to its accept boundary. Token-exact with plain greedy decode:
-        every committed token IS the model's argmax given its prefix."""
+        """One speculative engine step: draft up to K tokens per slot
+        (prompt lookup over the slot's own stream, reporting the per-slot
+        effective draft length ``k_eff``), score all K+1 positions in ONE
+        batched verify pass, commit the accepted prefix plus a final
+        bonus/resampled token, then rewind each slot's cache to its accept
+        boundary.
+
+        Greedy (``temperature <= 0``): accept the longest real-draft prefix
+        matching the model's own argmax — token-exact with plain greedy
+        decode. Sampled: the fused verify+accept step runs rejection
+        resampling on device (``spec_sample_accept``) — every committed
+        token is distributed exactly as plain sampled decode. Padded
+        proposals (positions >= ``k_eff``) are never scored as real in
+        either mode: under sampling a padded token was never drawn from q
+        (scoring it would corrupt the acceptance law), and under greedy a
+        padded 0 could spuriously match a legitimate argmax-0 token."""
         k = self._draft_len
         toks = np.zeros((self.scfg.max_batch, k + 1), np.int32)
+        keff = np.zeros(self.scfg.max_batch, np.int32)
         for i in active:
             # the draft context is the slot's visible stream (prompt — which
             # already contains failover-carried tokens — plus every token
@@ -519,28 +701,42 @@ class ServeEngine:
             # most the trailing ``ngram_lookback`` tokens of it
             ctx = self._spec_ctx[i]
             toks[i, 0] = ctx[-1]               # == tokens_out[-1], pending
-            toks[i, 1:] = ngram_propose(
+            toks[i, 1:], keff[i] = ngram_propose(
                 np.asarray(ctx[-self.scfg.ngram_lookback:], np.int32),
                 k, self.scfg.ngram_max)
-        logits, self.cache, ckpt = self._verify_fn(self.params, jnp.asarray(toks),
-                                                   self.cache)
-        greedy = np.asarray(jnp.argmax(logits, axis=-1))     # (B, K+1)
+        if self._sampled:
+            # ONE counter draw per engine step (the plain sampled step's
+            # discipline); accept/resample/bonus randomness derives from it
+            a_dev, fin_dev, self.cache, ckpt = self._spec_sample_fn(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(keff), self._next_sample_key())
+            acc = np.asarray(a_dev)
+            fin = np.asarray(fin_dev)
+        else:
+            logits, self.cache, ckpt = self._verify_fn(
+                self.params, jnp.asarray(toks), self.cache)
+            greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (B, K+1)
         keep = np.zeros(self.scfg.max_batch, np.int32)
         produced = 0
         for i in active:
             req = self.slots[i]
-            a = 0
-            while a < k and greedy[i, a] == toks[i, a + 1]:
-                a += 1
+            if self._sampled:
+                a = int(acc[i])
+                # accepted drafts verbatim, then the resampled/bonus token
+                seq = [int(toks[i, j + 1]) for j in range(a)] + [int(fin[i])]
+            else:
+                a = 0
+                while a < keff[i] and greedy[i, a] == toks[i, a + 1]:
+                    a += 1
+                seq = [int(greedy[i, j]) for j in range(a + 1)]
             keep[i] = a + 1                     # accepted drafts + pending token
             self._spec_slot_steps += 1
-            # commit greedy[0..a] (= accepted drafts + bonus) one at a time so
-            # eos / max_new / context-limit retirement fires at EXACTLY the
-            # token where plain decode would have stopped
+            # commit one token at a time so eos / max_new / context-limit
+            # retirement fires at EXACTLY the token where plain decode
+            # would have stopped
             delivered = 0
             ctx = self._spec_ctx[i]
-            for j in range(a + 1):
-                tok = int(greedy[i, j])
+            for tok in seq:
                 req.tokens_out.append(tok)
                 ctx.append(tok)
                 delivered += 1
@@ -621,9 +817,12 @@ class ServeEngine:
 
         ``which``: 'decode' (one-token step) or 'verify' (the speculative
         (1+K)-position verify pass; requires ``draft_len > 0``). With
-        ``temperature > 0`` the 'decode' form lowers the FUSED sampled step
-        — the computation the engine actually dispatches — not the unused
-        greedy one.
+        ``temperature > 0`` both forms lower the FUSED sampled computation
+        the engine actually dispatches — the sampled decode step, and the
+        sampled verify+accept/resample step (whose K+1 logit rows are
+        pinned replicated before top-k/softmax/Gumbel, so speculative
+        sampling obeys the same zero-partial-sum-AR invariant) — not the
+        unused greedy ones.
         """
         assert self.batched, "decode_step_hlo requires the batched engine"
         # a real (uncommitted) token array mirrors what step() dispatches,
@@ -632,6 +831,12 @@ class ServeEngine:
             assert self.spec, "verify HLO requires draft_len > 0"
             toks = jnp.zeros((self.scfg.max_batch, self._draft_len + 1), jnp.int32)
             with self._sharded_scope():
+                if self._sampled:
+                    keff = jnp.zeros((self.scfg.max_batch,), jnp.int32)
+                    key = jax.random.fold_in(self._sample_key, 0)
+                    return (self._spec_sample_fn
+                            .lower(self.params, toks, self.cache, keff, key)
+                            .compile().as_text())
                 return (self._verify_fn.lower(self.params, toks, self.cache)
                         .compile().as_text())
         toks = jnp.zeros((self.scfg.max_batch, 1), jnp.int32)
@@ -691,12 +896,23 @@ class ServeEngine:
                 "repaired": int(self.crest_state.n_repaired)}
 
     # -------------------------------------------------------------- metrics
+    @property
+    def effective_mode(self) -> str:
+        """The decode path this engine ACTUALLY runs (downgrades included):
+        '{spec|batched|slotwise}-{greedy|sampled}'. Benches and tests
+        assert on this instead of trusting the requested config."""
+        decode = ("spec" if self.spec
+                  else "batched" if self.batched else "slotwise")
+        return f"{decode}-{'sampled' if self._sampled else 'greedy'}"
+
     def metrics(self) -> dict:
         """Throughput/latency counters for the dashboard & benchmarks."""
         st = np.asarray(self.step_times, np.float64)
         total = float(st.sum()) if st.size else 0.0
         return {
             "batched": self.batched,
+            "effective_mode": self.effective_mode,
+            "downgrades": list(self.downgrades),
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
             "tp_policy": self.tp_policy if self.mesh is not None else None,
             "spec": self.spec,

@@ -8,29 +8,52 @@ weights to stream): repeated spans — code, templated text, self-repetition
 in long generations — are predicted by finding the current suffix n-gram
 earlier in the stream and proposing whatever followed it.
 
-Correctness never depends on draft quality: the engine's verify pass only
-commits draft tokens that match the model's own greedy argmax, so a bad
-draft costs nothing (the step still commits one token, exactly like plain
-decode) and a good draft commits up to K+1.
+Correctness never depends on draft quality. Under greedy decode the verify
+pass only commits draft tokens that match the model's own argmax; under
+sampled decode (``temperature > 0``) the engine runs **speculative
+sampling** against this drafter's distribution. A prompt-lookup proposal is
+deterministic given the context, so its per-position draft distribution q
+is a **point mass** (a delta) at the proposed token — the accept/resample
+rule in ``serve/engine.spec_sample_accept`` is specialized to exactly that
+q. Either way a bad draft costs nothing (the step still commits one token,
+exactly like plain decode) and a good draft commits up to K+1.
+
+Because q must be a distribution over REAL proposals, the drafter reports
+``k_eff`` — how many of the k returned tokens were actually proposed.
+Zero-padding alone cannot carry that information: token id 0 is a
+legitimate vocab token, and a padded 0 scored as a real proposal would be
+accepted with probability p(0) under sampling (and could spuriously match
+argmax 0 under greedy) even though it was never drawn from q.
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import numpy as np
 
 
-def ngram_propose(context: np.ndarray, k: int, ngram_max: int) -> np.ndarray:
-    """Propose ``k`` draft tokens by prompt lookup over ``context``.
+def ngram_propose(context: np.ndarray, k: int, ngram_max: int) -> Tuple[np.ndarray, int]:
+    """Propose up to ``k`` draft tokens by prompt lookup over ``context``.
 
     Finds the longest suffix n-gram (n = ngram_max .. 1) of ``context`` that
-    also occurs earlier, and returns the ``k`` tokens that followed its most
-    recent earlier occurrence, zero-padded at the tail. A miss returns
-    zeros — a guaranteed-rejected (but free) guess.
+    also occurs earlier, and returns ``(draft, k_eff)``: the tokens that
+    followed an earlier occurrence, zero-padded at the tail, plus the number
+    ``k_eff`` of REAL proposals among them (padding must never be scored as
+    a proposal — see module docstring). A miss returns ``(zeros, 0)``.
+
+    Among the earlier occurrences, the most recent one with a FULL k-token
+    continuation wins; if none has k tokens available before the context
+    end, the most recent occurrence wins with a short (``k_eff < k``)
+    continuation. Self-repetitive tails make the most recent match sit
+    flush against the context end, where only 1 continuation token exists —
+    preferring a full continuation keeps the proposal length (and thus the
+    speculative ceiling) at k instead of collapsing to 1.
     """
     ctx = np.asarray(context, np.int32).ravel()
     out = np.zeros(k, np.int32)
     n_ctx = len(ctx)
     if n_ctx < 2 or k <= 0:
-        return out
+        return out, 0
     for n in range(min(ngram_max, n_ctx - 1), 0, -1):
         suffix = ctx[n_ctx - n:]
         # windows of length n starting at 0 .. n_ctx-n-1 (exclude the suffix
@@ -38,8 +61,9 @@ def ngram_propose(context: np.ndarray, k: int, ngram_max: int) -> np.ndarray:
         wins = np.lib.stride_tricks.sliding_window_view(ctx, n)[:-1]
         hits = np.nonzero((wins == suffix).all(axis=1))[0]
         if hits.size:
-            start = int(hits[-1]) + n          # most recent continuation
+            full = hits[hits + n + k <= n_ctx]
+            start = int(full[-1] if full.size else hits[-1]) + n
             cont = ctx[start:start + k]
             out[:len(cont)] = cont
-            return out
-    return out
+            return out, len(cont)
+    return out, 0

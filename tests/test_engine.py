@@ -291,6 +291,34 @@ def test_sampling_topk1_matches_greedy_batched_and_slotwise(tiny_model):
             assert a.tokens_out == b.tokens_out, (batched, a.uid)
 
 
+def test_sampling_topk_tied_kth_keeps_all_tied_candidates():
+    """The documented top-k tie semantics: the truncated support is
+    VALUE-defined — every logit >= the k-th largest survives, so a tie at
+    the k-th logit keeps MORE than k candidates (no arbitrary index-order
+    tie-break). The spec-sampling verify pass relies on plain decode and
+    verify sharing this exact truncation (`_truncate_logits` is the single
+    implementation both use)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.engine import _sample_tokens, _truncate_logits
+    # three-way tie AT the k-th (2nd) largest: candidates 1, 2, 3 all tie
+    row = jnp.asarray([[4.0, 1.0, 1.0, 1.0, 0.5, -2.0]], jnp.float32)
+    x = np.asarray(_truncate_logits(row, 1.0, 2))
+    assert np.isfinite(x[0, :4]).all(), x          # max + all tied kth
+    assert not np.isfinite(x[0, 4:]).any(), x      # below kth: masked
+    # and the sampler actually reaches every tied candidate (never beyond)
+    draws = np.asarray(jax.vmap(
+        lambda i: _sample_tokens(row, jax.random.fold_in(
+            jax.random.PRNGKey(3), i), 1.0, 2)[0])(jnp.arange(800)))
+    assert set(np.unique(draws)) <= {0, 1, 2, 3}
+    assert {1, 2, 3} <= set(np.unique(draws)), np.unique(draws)
+    # consequence (documented): top_k=1 with a TIED max samples among the
+    # tied tokens rather than collapsing to first-index argmax
+    tied_max = jnp.asarray([[2.0, 2.0, -1.0]], jnp.float32)
+    x1 = np.asarray(_truncate_logits(tied_max, 1.0, 1))
+    assert np.isfinite(x1[0, :2]).all() and not np.isfinite(x1[0, 2])
+
+
 def test_sampling_failover_never_rewrites_emitted_tokens(tiny_model):
     """Failover under temperature sampling: the rebuild carries EVERY
     emitted token in the clone's prompt, so a re-draw on the survivor can

@@ -263,6 +263,37 @@ def test_sharded_sampling_deterministic_and_on_device(mesh):
     assert all(0 <= t < cfg.vocab for row in a for t in row)
 
 
+def test_family_sampled_spec_sharded_token_parity(family_model, mesh):
+    """Speculative SAMPLING on the mesh: the sharded spec-sampled engine
+    emits exactly the unsharded spec-sampled engine's tokens for the same
+    seed + schedule (contractions never split and the K+1 logit rows are
+    pinned replicated before the acceptance draws, so the on-device
+    uniforms/Gumbel see bitwise-identical inputs) — token parity implies
+    the distribution parity the tentpole requires, realization included."""
+    fam, cfg, model, params = family_model
+    scfg = _scfg(draft_len=3, temperature=0.9, top_k=6, sample_seed=13)
+    ref, e0 = _run(model, params, cfg, LENS, scfg)
+    out, eng = _run(model, params, cfg, LENS, scfg, mesh=mesh)
+    assert e0.effective_mode == eng.effective_mode == "spec-sampled"
+    assert ref == out, (fam, ref, out)
+
+
+def test_sampled_spec_verify_step_has_zero_partial_sum_allreduce(mesh):
+    """The FUSED sampled verify+accept/resample step — what a temperature>0
+    spec engine actually dispatches, and what decode_step_hlo('verify')
+    lowers when sampling is on — obeys the cascade zero-AR invariant: the
+    K+1 logit rows are pinned replicated before top-k/softmax/Gumbel, so
+    speculative sampling adds no partial-sum traffic."""
+    from benchmarks import hlo_analysis
+    cfg, model = registry.load(registry.FAMILY_SMOKE["transformer"], smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    eng = ServeEngine(model, params, CCFG,
+                      _scfg(draft_len=4, temperature=0.8, top_k=5), mesh=mesh)
+    assert eng.effective_mode == "spec-sampled"
+    ar = hlo_analysis.partial_sum_allreduces(eng.decode_step_hlo("verify"))
+    assert ar["count"] == 0, ar["ops"]
+
+
 def test_sampled_decode_step_has_zero_partial_sum_allreduce(mesh):
     """Sampling must not reintroduce partial-sum traffic: the FUSED sampled
     step (the computation a temperature>0 engine actually dispatches, and

@@ -59,20 +59,56 @@ def _run(model, params, cfg, lens, scfg, max_new=4, seed=0, max_steps=400):
 def test_ngram_propose_matches_longest_recent_suffix():
     ctx = [1, 2, 3, 9, 1, 2, 3]
     # suffix 3-gram (1,2,3) occurred at 0; continuation is [9, 1, 2]
-    assert ngram_propose(ctx, 3, 3).tolist() == [9, 1, 2]
+    out, ke = ngram_propose(ctx, 3, 3)
+    assert out.tolist() == [9, 1, 2] and ke == 3
     # most RECENT earlier occurrence wins
     ctx = [5, 7, 1, 5, 7, 2, 5, 7]
-    assert ngram_propose(ctx, 1, 2).tolist() == [2]
+    out, ke = ngram_propose(ctx, 1, 2)
+    assert out.tolist() == [2] and ke == 1
 
 
 def test_ngram_propose_falls_back_to_shorter_ngrams_and_misses():
     # no 3- or 2-gram match, but the 1-gram suffix [4] occurred earlier
-    assert ngram_propose([4, 1, 2, 4], 2, 3).tolist() == [1, 2]
-    # total miss -> zeros (a free, guaranteed-rejected guess)
-    assert ngram_propose([1, 2, 3], 2, 3).tolist() == [0, 0]
-    assert ngram_propose([7], 2, 3).tolist() == [0, 0]
-    # continuation shorter than k is zero-padded
-    assert ngram_propose([9, 3, 9], 3, 1).tolist() == [3, 9, 0]
+    out, ke = ngram_propose([4, 1, 2, 4], 2, 3)
+    assert out.tolist() == [1, 2] and ke == 2
+    # total miss -> zeros AND k_eff == 0 (a free, guaranteed-unscored guess)
+    out, ke = ngram_propose([1, 2, 3], 2, 3)
+    assert out.tolist() == [0, 0] and ke == 0
+    out, ke = ngram_propose([7], 2, 3)
+    assert out.tolist() == [0, 0] and ke == 0
+    # continuation shorter than k is zero-padded, and k_eff marks the cut
+    out, ke = ngram_propose([9, 3, 9], 3, 1)
+    assert out.tolist() == [3, 9, 0] and ke == 2
+
+
+def test_ngram_propose_k_eff_distinguishes_real_token_zero_from_padding():
+    """Token id 0 is a legitimate vocab token: a proposal OF token 0 must be
+    scoreable (k_eff covers it) while zero-PADDING must not — conflating
+    them would score padding as a real draft (accepted with probability
+    p(0) under sampled speculation, spuriously matched under greedy)."""
+    # suffix [5] recurs; its continuation is genuinely [0, 0, 7]
+    out, ke = ngram_propose([5, 0, 0, 7, 1, 5], 3, 1)
+    assert out.tolist() == [0, 0, 7] and ke == 3
+    # a real token-0 proposal followed by zero padding: positionally
+    # indistinguishable in the array — only k_eff tells real from padding
+    out, ke = ngram_propose([4, 0, 4], 3, 1)
+    assert out.tolist() == [0, 4, 0] and ke == 2
+    # and a 1-token continuation that IS token 0
+    out, ke = ngram_propose([7, 0, 7], 1, 1)
+    assert out.tolist() == [0] and ke == 1
+
+
+def test_ngram_propose_prefers_latest_full_continuation():
+    """Self-repetitive tails put the most recent match flush against the
+    context end (1-token continuation); an earlier occurrence with a full
+    k-token continuation must win so the proposal length does not collapse
+    — the speculative acceptance ceiling depends on it."""
+    ctx = [0] * 12
+    out, ke = ngram_propose(ctx, 4, 3)
+    assert out.tolist() == [0, 0, 0, 0] and ke == 4
+    # no full continuation exists anywhere -> most recent partial one
+    out, ke = ngram_propose([8, 9, 8, 9, 8], 4, 2)
+    assert ke < 4 and out[:ke].tolist() == [9, 8][:ke]
 
 
 # ---------------------------------------------------------------------------
@@ -247,39 +283,355 @@ def test_draft_len_zero_degenerates_to_plain_batched(family_model):
     assert len(calls) == 1
 
 
-def test_sampling_disables_speculation():
-    """Speculation is greedy-only: temperature > 0 falls back to the
-    (on-device) sampled batched path, which must still be seed-deterministic."""
+def test_sampling_keeps_speculation_enabled_and_deterministic():
+    """temperature > 0 no longer disables speculation: the engine runs
+    speculative SAMPLING (rejection resampling), which must still be
+    seed-deterministic (one fold_in counter, all draws on device)."""
     cfg, model, params = _load("codeqwen1.5-7b")
     scfg = ServeConfig(max_batch=2, max_len=64, batched=True, draft_len=4,
                        temperature=0.9, top_k=5, sample_seed=11)
     a, eng = _run(model, params, cfg, [8, 5], scfg, max_new=5)
-    assert not eng.spec
+    assert eng.spec and eng.effective_mode == "spec-sampled"
+    assert not eng.downgrades
     b_, _ = _run(model, params, cfg, [8, 5], scfg, max_new=5)
     for ra, rb in zip(a, b_):
         assert ra.tokens_out == rb.tokens_out
         assert all(0 <= t < cfg.vocab for t in ra.tokens_out)
 
 
+def test_mode_downgrades_warn_once_and_surface_in_metrics():
+    """Silent mode downgrades are gone: every fallback warns at engine
+    construction and metrics()['effective_mode'] reports the path that
+    actually runs (benches assert on it instead of trusting the config)."""
+    cfg, model = registry.load("musicgen-large", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    with pytest.warns(RuntimeWarning, match="multi-codebook"):
+        eng = ServeEngine(model, params, CCFG,
+                          ServeConfig(max_batch=2, max_len=64, batched=True))
+    assert not eng.batched
+    assert eng.effective_mode == "slotwise-greedy"
+    assert eng.metrics()["downgrades"]
+    # draft_len on a slot-wise engine: speculation needs the batched grid
+    with pytest.warns(RuntimeWarning, match="speculative"):
+        eng = ServeEngine(model, params, CCFG,
+                          ServeConfig(max_batch=2, max_len=64, batched=True,
+                                      draft_len=4))
+    assert not eng.spec and eng.effective_mode == "slotwise-greedy"
+    assert len(eng.metrics()["downgrades"]) == 2
+    # a fully-served config emits no warning and no downgrade entries
+    cfg2, model2, params2 = _load("codeqwen1.5-7b")
+    eng2 = ServeEngine(model2, params2, CCFG,
+                       ServeConfig(max_batch=2, max_len=64, batched=True,
+                                   draft_len=2))
+    assert eng2.spec and eng2.effective_mode == "spec-greedy"
+    assert not eng2.metrics()["downgrades"]
+
+
+# ---------------------------------------------------------------------------
+# speculative SAMPLING: distribution exactness (the tentpole guarantee)
+#
+# Sampled speculation cannot be token-exact with plain sampled decode (the
+# draws differ), so the contract is DISTRIBUTIONAL: every committed token is
+# drawn from exactly the truncated distribution p that plain sampled decode
+# uses. Pinned three ways, per family, on a tiny vocab:
+#   * the verify pass and the plain decode step produce the same logits
+#     (same p) from the same cache state;
+#   * exact enumeration over EVERY possible draft token: the fused
+#     accept/resample rule's committed-token law equals p (empirically over
+#     a fixed key set — deterministic — plus deterministic branch cases
+#     where the law collapses to a point);
+#   * the full engine's first decode token matches the EXACT mixture
+#     sum_t0 p0(t0) * p1(t1 | t0) computed from the model directly.
+# ---------------------------------------------------------------------------
+
+TINY_VOCAB = 8
+
+
+@pytest.fixture(scope="module", params=sorted(registry.FAMILY_SMOKE), ids=str)
+def tiny_family_model(request):
+    cfg = registry.get_config(registry.FAMILY_SMOKE[request.param], smoke=True)
+    cfg = dataclasses.replace(cfg, vocab=TINY_VOCAB)
+    model = registry.build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    return request.param, cfg, model, params
+
+
+def _truncated_p(logits, temperature, top_k):
+    from repro.serve.engine import _truncate_logits
+    return np.asarray(jax.nn.softmax(
+        _truncate_logits(jnp.asarray(logits), temperature, top_k), axis=-1))
+
+
+def test_family_spec_sampled_verify_rows_share_p_with_plain_decode(
+        tiny_family_model):
+    """Row 0 of the verify pass and the plain decode step score the SAME
+    distribution from the same cache state — the premise that lets the
+    acceptance rule claim it samples from plain decode's p."""
+    fam, cfg, model, params = tiny_family_model
+    prompt = jnp.asarray([[3, 1, 4, 1, 5, 2, 6]], jnp.int32) % cfg.vocab
+    _, cache_a = model.prefill(params, {"tokens": prompt}, CCFG, max_len=32)
+    _, cache_b = model.prefill(params, {"tokens": prompt}, CCFG, max_len=32)
+    dec, _ = model.decode_step(params, {"tokens": jnp.asarray([[2]], jnp.int32)},
+                               cache_a, CCFG)
+    chunk = jnp.asarray([[2, 5, 0]], jnp.int32)     # pending + 2 drafts
+    ver, _, _ = model.spec_verify(params, {"tokens": chunk}, cache_b, CCFG)
+    np.testing.assert_allclose(np.asarray(dec).reshape(-1),
+                               np.asarray(ver[0, 0]).reshape(-1),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_family_spec_sampled_marginal_exact_enumeration(tiny_family_model):
+    """Enumerate EVERY possible draft token d on real verify logits: the
+    fused accept/resample law's committed-token marginal must equal the
+    truncated p — p(d)*1[t=d] + (1-p(d))*residual_d(t) = p(t) — at the
+    first row (acceptance + residual resample) AND, conditioned on
+    acceptance, at the second row (teacher-forced continuation)."""
+    from repro.serve.engine import spec_sample_accept
+    fam, cfg, model, params = tiny_family_model
+    T, top_k, v = 0.8, 5, cfg.vocab
+    prompt = jnp.asarray([[1, 6, 2, 0, 3, 3, 7, 4]], jnp.int32) % v
+    _, cache = model.prefill(params, {"tokens": prompt}, CCFG, max_len=32)
+    n = 4096
+    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(9), i))(
+        jnp.arange(n))
+    keff = jnp.asarray([2], jnp.int32)
+
+    @jax.jit
+    def run_keys(logits, drafts):       # compiled ONCE, reused per d0
+        return jax.vmap(
+            lambda k: spec_sample_accept(logits, drafts, keff, k, T, top_k)
+        )(keys)
+
+    for d0 in range(v):
+        chunk = jnp.asarray([[5, d0, 2]], jnp.int32)    # pending, d0, d1
+        logits, _, _ = model.spec_verify(params, {"tokens": chunk}, cache, CCFG)
+        p0 = _truncated_p(logits, T, top_k)[0, 0]
+        p1 = _truncated_p(logits, T, top_k)[0, 1]
+        a_all, t_all = run_keys(logits, chunk[:, 1:])
+        a_all = np.asarray(a_all).ravel()
+        t_all = np.asarray(t_all).ravel()
+        first = np.where(a_all > 0, d0, t_all)
+        emp0 = np.bincount(first, minlength=v) / n
+        assert 0.5 * np.abs(emp0 - p0).sum() < 0.06, (fam, d0, emp0, p0)
+        acc = a_all >= 1
+        if acc.sum() > 400:      # second-row law, conditioned on acceptance
+            second = np.where(a_all[acc] > 1, 2, t_all[acc])
+            emp1 = np.bincount(second, minlength=v) / acc.sum()
+            assert 0.5 * np.abs(emp1 - p1).sum() < 0.1, (fam, d0, emp1, p1)
+        # acceptance frequency itself follows p0(d0)
+        assert abs(acc.mean() - p0[d0]) < 0.05, (fam, d0, acc.mean(), p0[d0])
+
+
+def test_spec_sampled_branch_enumeration_deterministic():
+    """The branches whose law collapses to a point, enumerated exactly:
+    p(d)=1 always accepts; a draft outside top-k always rejects and the
+    residual NEVER returns the rejected token; k_eff=0 (drafter miss /
+    inactive slot) ignores drafts entirely and samples row 0's p; padded
+    positions beyond k_eff are never accepted even when p(pad token) = 1."""
+    from repro.serve.engine import spec_sample_accept
+    v, big = 6, 50.0
+    keys = [jax.random.PRNGKey(i) for i in range(32)]
+    # p concentrated on the draft -> accept probability 1, bonus from row 1
+    logits = np.full((1, 2, v), -big, np.float32)
+    logits[0, 0, 3] = big                      # p0 = delta(3)
+    logits[0, 1, 1] = big                      # bonus row = delta(1)
+    L = jnp.asarray(logits)
+    for k in keys:
+        a, t = spec_sample_accept(L, jnp.asarray([[3]]), jnp.asarray([1]),
+                                  k, 1.0, 0)
+        assert int(a[0]) == 1 and int(t[0]) == 1
+    # draft outside top-k: p(d) = 0 -> always reject; residual = p, never d
+    logits = np.zeros((1, 2, v), np.float32)
+    logits[0, 0] = [5.0, 4.0, 3.0, -big, 0.0, 0.0]
+    L = jnp.asarray(logits)
+    seen = set()
+    for k in keys:
+        a, t = spec_sample_accept(L, jnp.asarray([[3]]), jnp.asarray([1]),
+                                  k, 1.0, 3)
+        assert int(a[0]) == 0 and int(t[0]) != 3
+        seen.add(int(t[0]))
+    assert seen <= {0, 1, 2}                   # top-3 truncated support
+    # k_eff = 0: drafts ignored, committed token ~ p0 (here a point mass)
+    logits = np.full((1, 2, v), -big, np.float32)
+    logits[0, 0, 2] = big
+    L = jnp.asarray(logits)
+    for k in keys:
+        a, t = spec_sample_accept(L, jnp.asarray([[2]]), jnp.asarray([0]),
+                                  k, 1.0, 0)
+        assert int(a[0]) == 0 and int(t[0]) == 2
+    # padding past k_eff never accepted even if the model loves token 0
+    logits = np.full((1, 3, v), -big, np.float32)
+    logits[0, 0, 4] = big                      # real draft 4: accepted
+    logits[0, 1, 0] = big                      # pad token 0 has p=1 ...
+    logits[0, 2, 5] = big
+    L = jnp.asarray(logits)
+    for k in keys:
+        a, t = spec_sample_accept(L, jnp.asarray([[4, 0]]), jnp.asarray([1]),
+                                  k, 1.0, 0)
+        assert int(a[0]) == 1 and int(t[0]) == 0   # bonus from row k_eff=1
+        # ... but it is the BONUS draw from row 1's p, not an acceptance:
+        # a stopped at k_eff, exactly one draft committed
+
+
+def _reset_engine(eng, seed):
+    """Reuse a ServeEngine's jitted closures across seeded runs (fresh
+    cache + counters; avoids per-seed recompilation in distribution tests).
+
+    Mirrors the per-run state ServeEngine.__init__ sets up — if the engine
+    grows new per-run state, add it here too (stale state would corrupt the
+    empirical distributions these tests accumulate across runs)."""
+    scfg = eng.scfg
+    eng._sample_key = jax.random.PRNGKey(seed)
+    eng._sample_step = 0
+    eng.queue.clear()
+    eng.slots = [None] * scfg.max_batch
+    eng.cache = eng.model.init_cache(scfg.max_batch, eng._cache_len,
+                                     dtype=eng.ccfg.resolved_kv_dtype)
+    eng._staging = None
+    eng._retired = []
+    eng._rejected = 0
+    eng._spec_ctx = [None] * scfg.max_batch
+    eng.step_times = []
+    eng._decode_tokens = 0
+    eng._steps = 0
+    eng._admission_waits = []
+    eng._accepted_drafts = 0
+    eng._spec_slot_steps = 0
+
+
+def test_family_spec_sampled_engine_first_token_matches_exact_mixture(
+        tiny_family_model):
+    """Full-engine law check: over many seeds, the first DECODE-step token
+    of a spec-sampled stream follows the exact mixture
+    sum_t0 p0(t0) * p1(t1|t0) computed directly from the model — i.e. the
+    engine's speculative sampling is distribution-equal to plain sampled
+    decode end-to-end (admission draw included)."""
+    fam, cfg, model, params = tiny_family_model
+    T, top_k, v = 0.9, 0, cfg.vocab
+    prompt = (np.asarray([1, 6, 2, 0, 3, 3, 7, 4]) % v).astype(np.int32)
+    # exact reference: p0 over the admission token, p1 rows per t0
+    pl, _ = model.prefill(params, {"tokens": jnp.asarray(prompt)[None, :]},
+                          CCFG, max_len=64)
+    p0 = _truncated_p(np.asarray(pl)[0, -1], T, top_k)
+    exact = np.zeros(v)
+    for t0 in range(v):
+        ext = np.concatenate([prompt, [t0]]).astype(np.int32)
+        pl1, _ = model.prefill(params, {"tokens": jnp.asarray(ext)[None, :]},
+                               CCFG, max_len=64)
+        exact += p0[t0] * _truncated_p(np.asarray(pl1)[0, -1], T, top_k)
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=1, max_len=64, batched=True,
+                                  prefill_chunk=8, draft_len=2,
+                                  temperature=T, top_k=top_k))
+    assert eng.effective_mode == "spec-sampled"
+    n = 150
+    firsts = np.zeros(n, np.int64)
+    for s in range(n):
+        _reset_engine(eng, s)
+        req = Request(uid=s, prompt=prompt, max_new_tokens=2)
+        eng.submit(req)
+        eng.run_until_drained(50)
+        assert len(req.tokens_out) >= 2
+        firsts[s] = req.tokens_out[1]
+    emp = np.bincount(firsts, minlength=v) / n
+    tv = 0.5 * np.abs(emp - exact).sum()
+    assert tv < 0.2, (fam, tv, emp, exact)
+
+
+def test_spec_sampled_full_rewind_is_identity_through_fused_step():
+    """keep=0 after the FUSED sampled verify+accept dispatch restores the
+    pre-verify cache bit-exactly — the sampled path's checkpoint is the
+    same contract as the greedy one's (rewind under sampling)."""
+    cfg, model, params = _load("codeqwen1.5-7b")
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=2, max_len=64, batched=True,
+                                  prefill_chunk=8, draft_len=3,
+                                  temperature=0.7, top_k=4))
+    eng.submit(Request(uid=0, prompt=np.arange(6, dtype=np.int32) % cfg.vocab,
+                       max_new_tokens=8))
+    eng.step()                                  # admit + first spec step
+    before = [np.asarray(x).copy() for x in jax.tree.leaves(eng.cache)]
+    toks = jnp.zeros((2, 4), jnp.int32)
+    keff = jnp.zeros((2,), jnp.int32)
+    key = jax.random.fold_in(eng._sample_key, 99)
+    _, _, cache2, ckpt = eng._spec_sample_fn(eng.params, toks, eng.cache,
+                                             keff, key)
+    rewound = eng._rewind_fn(cache2, ckpt, jnp.zeros((2,), jnp.int32))
+    after = jax.tree.leaves(rewound)
+    assert len(before) == len(after)
+    for x, y in zip(before, after):
+        np.testing.assert_array_equal(x, np.asarray(y))
+
+
+def test_spec_sampled_eos_mid_acceptance_truncates_exactly():
+    """Same seed with and without eos_id: the eos run must emit the
+    identical stream up to and including the first eos and nothing after —
+    post-eos accepted drafts are never exposed, exactly like greedy."""
+    cfg, model, params = _load("codeqwen1.5-7b")
+    scfg = ServeConfig(max_batch=1, max_len=64, batched=True, draft_len=4,
+                       temperature=1.0, sample_seed=5)
+    free, _ = _run(model, params, cfg, [8], scfg, max_new=8, seed=2)
+    stream = free[0].tokens_out
+    eos = stream[2]
+    idx = stream.index(eos)
+    out, _ = _run(model, params, cfg, [8],
+                  dataclasses.replace(scfg, eos_id=eos), max_new=8, seed=2)
+    assert out[0].tokens_out == stream[:idx + 1]
+
+
+def test_spec_sampled_failover_carries_only_committed_tokens():
+    """Replica death mid-sampled-speculation: the rebuilt prompt carries
+    the original prompt + every COMMITTED token and nothing else. The
+    survivor's continuation is differently-realized (fresh RNG counter —
+    the documented caveat) but must be a valid, complete stream."""
+    from repro.serve.elastic import ReplicaSet
+    cfg, model, params = _load("codeqwen1.5-7b")
+    scfg = ServeConfig(max_batch=1, max_len=64, batched=True, draft_len=3,
+                       temperature=0.9, top_k=6, sample_seed=3)
+    rs = ReplicaSet([ServeEngine(model, params, CCFG, scfg) for _ in range(2)])
+    victim = _requests(cfg, [8], max_new=8, seed=3)[0]
+    rs.submit(victim)
+    for _ in range(3):
+        rs.step()
+    emitted = list(victim.tokens_out)
+    assert emitted, "victim must have committed tokens before the kill"
+    killed_on = next(i for i, e in enumerate(rs.engines) if victim in e.slots)
+    rs.kill_replica(killed_on)
+    clone = rs.requeued[0]
+    assert clone.prompt_carried == len(emitted)
+    assert clone.prompt.tolist() == victim.prompt.tolist() + emitted
+    rs.drain(max_steps=300)
+    assert clone.done
+    # carried history is immutable; the continuation completes the stream
+    assert clone.tokens_out[:len(emitted)] == emitted
+    assert len(clone.tokens_out) == 8
+    assert all(0 <= t < cfg.vocab for t in clone.tokens_out)
+
+
 def test_spec_metrics_report_acceptance():
-    """Force full acceptance (zeroed head -> constant argmax, so the n-gram
-    drafter predicts the stream perfectly after warmup) and check the
-    acceptance accounting actually counts delivered drafts."""
+    """Force full acceptance (zeroed head -> constant argmax-0 stream, and
+    a prompt tail of zeros so the drafter's k_eff is 4 from the very first
+    step — k_eff only covers REAL proposals, so without the warm tail the
+    first few steps would honestly report short drafts) and check the
+    acceptance accounting counts exactly the delivered drafts."""
     cfg, model, params = _load("codeqwen1.5-7b")
     params = dict(params)
     params["lm_head"] = jax.tree.map(jnp.zeros_like, params["lm_head"])
     rng = np.random.default_rng(0)
-    pat = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    pat = rng.integers(1, cfg.vocab, 4).astype(np.int32)
+    prompt = np.concatenate([np.tile(pat, 2),
+                             np.zeros(12, np.int32)]).astype(np.int32)
     eng = ServeEngine(model, params, CCFG,
                       ServeConfig(max_batch=1, max_len=256, batched=True,
                                   prefill_chunk=8, draft_len=4))
-    eng.submit(Request(uid=0, prompt=np.tile(pat, 5), max_new_tokens=41))
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=41))
     eng.run_until_drained(200)
     m = eng.metrics()
     assert m["spec"] and m["draft_len"] == 4
-    # constant stream: every step after the first accepts all 4 drafts (the
-    # very first draft may miss before a 0 enters the context)
-    assert m["accepted_per_step"] > 3.0, m["accepted_per_step"]
+    assert m["effective_mode"] == "spec-greedy"
+    # constant stream + warm drafter context: every step accepts all 4
+    # real drafts (k_eff = 4 throughout)
+    assert m["accepted_per_step"] == 4.0, m["accepted_per_step"]
     assert m["decode_tokens"] == 40         # first token comes from prefill
     # tokens delivered per slot-step = accepted drafts + the bonus token
     assert m["decode_tokens"] == m["draft_tokens_accepted"] + m["steps"]
