@@ -10,9 +10,67 @@ import os
 
 
 def load(path):
+    """Roofline rows keyed by (arch, shape). Schema-tolerant: rows from
+    older sweeps (or hand-edited files) may lack ``arch``/``shape`` — they
+    key under '?' instead of KeyError-ing the whole report away."""
     if not os.path.exists(path):
         return {}
-    return {(r["arch"], r["shape"]): r for r in json.load(open(path))}
+    return {(r.get("arch", "?"), r.get("shape", "?")): r
+            for r in json.load(open(path))}
+
+
+def serving_rows():
+    """All serving-bench rows: the main artifact plus the sibling files the
+    CI mesh / spec-sampling / fused-decode legs write (kept separate so the
+    single-device gate artifact stays byte-stable)."""
+    serving_path = next((p for p in ("results/bench_serving.json",
+                                     "results/serving.json")
+                         if os.path.exists(p)), None)
+    rows = json.load(open(serving_path)) if serving_path else []
+    for extra in ("results/bench_serving_mesh.json",
+                  "results/bench_serving_sampled.json",
+                  "results/bench_serving_fused.json"):
+        if os.path.exists(extra):
+            rows += json.load(open(extra))
+    return rows
+
+
+def fused_lines(rows):
+    """Markdown lines for the fused-FP4 measured-vs-bound table ('' if no
+    fused rows). Tolerant of rows missing the bound fields: a fused row
+    without ``weight_stream_bytes_per_device`` renders with a 0.00 GB cell
+    instead of dropping the table."""
+    frows = [r for r in rows if r.get("mode") == "fused"]
+    if not frows:
+        return []
+    lines = [
+        "",
+        "## Fused FP4 decode: measured vs weight-streaming bound "
+        "(smoke models)",
+        "",
+        "bound = max_batch / (weight bytes / HBM bw): the ceiling where "
+        "decode streams every live weight byte exactly once per step. "
+        "Measured rows are CPU interpret-mode smoke numbers; the ratio "
+        "becomes meaningful on TPU.",
+        "",
+        "| family | batch | fused tok/s | fp4 jnp tok/s | kernel speedup "
+        "| weight-stream GB/dev | bound tok/s | measured/bound |",
+        "|" + "---|" * 8,
+    ]
+    jnp_by_key = {(r.get("family", "?"), r.get("max_batch", "?")):
+                  r.get("tokens_per_s", "—")
+                  for r in rows if r.get("mode") == "fp4"}
+    for r in sorted(frows, key=lambda x: (str(x.get("family", "?")),
+                                          str(x.get("max_batch", "?")))):
+        key = (r.get("family", "?"), r.get("max_batch", "?"))
+        gb = (r.get("weight_stream_bytes_per_device") or 0) / 1e9
+        lines.append(
+            f"| {key[0]} | {key[1]} | {r.get('tokens_per_s', '—')} "
+            f"| {jnp_by_key.get(key, '—')} "
+            f"| {r.get('speedup_vs_fp4_jnp', '—')}x "
+            f"| {gb:.2f} | {r.get('decode_bound_tokens_per_s', '—')} "
+            f"| {r.get('fraction_of_bound', '—')} |")
+    return lines
 
 
 def main():
@@ -47,17 +105,7 @@ def main():
     # serving: batched vs slot-wise continuous-batching decode (+ spec), per
     # family. Loading is schema-tolerant: rows from earlier PRs may lack the
     # spec columns (or even max_batch/mode) and must still render.
-    serving_path = next((p for p in ("results/bench_serving.json",
-                                     "results/serving.json")
-                         if os.path.exists(p)), None)
-    rows = json.load(open(serving_path)) if serving_path else []
-    # the CI multi-device and spec-sampling legs write their rows to sibling
-    # files so the single-device gate artifact stays byte-stable; merge any
-    # that are present
-    for extra in ("results/bench_serving_mesh.json",
-                  "results/bench_serving_sampled.json"):
-        if os.path.exists(extra):
-            rows += json.load(open(extra))
+    rows = serving_rows()
     if rows:
         print("\n## Serving decode throughput (benchmarks/serving.py)\n")
         print("accepted/step for sampled spec rows is bounded by the model's "
@@ -70,6 +118,8 @@ def main():
         print("|" + "---|" * 13)
         by_key = {}
         for r in rows:
+            if r.get("mode") in ("fp4", "fused"):
+                continue  # rendered in their own table (fused_lines)
             key = (r.get("family", r.get("arch", "?")), r.get("max_batch", "?"))
             # sampled spec rows (temperature > 0) render in their own
             # columns; greedy spec rows keep the legacy 'spec' slot
@@ -136,8 +186,9 @@ def main():
         print("| arch | shape | family | bound tok/s (TPU projection) "
               "| weight-stream GB/dev | measured tok/s (CPU smoke) |")
         print("|" + "---|" * 6)
-        for r in sorted(bound_rows, key=lambda x: (x["arch"], x["shape"])):
-            fam = fam_of.get(r["arch"], "?")
+        for r in sorted(bound_rows, key=lambda x: (x.get("arch", "?"),
+                                                   x.get("shape", "?"))):
+            fam = fam_of.get(r.get("arch", "?"), "?")
             # config families -> serving-bench families (dense GQA/MHA and
             # the modality stubs all decode through the transformer engine)
             fam = {"hybrid": "griffin", "dense": "transformer",
@@ -145,8 +196,11 @@ def main():
             mb, mt = measured.get(fam, (None, "—"))
             gb = (r.get("weight_stream_bytes_per_device") or 0) / 1e9
             mcell = f"{mt} (b={mb})" if mb else "—"
-            print(f"| {r['arch']} | {r['shape']} | {fam} "
+            print(f"| {r.get('arch', '?')} | {r.get('shape', '?')} | {fam} "
                   f"| {r['decode_bound_tokens_per_s']} | {gb:.2f} | {mcell} |")
+
+    for line in fused_lines(rows):
+        print(line)
 
     # CASCADE invariant check: forward graphs with zero all-reduce bytes
     print("\n## CASCADE zero-partial-sum invariant (faithful preset)\n")

@@ -33,6 +33,17 @@ sizes, in both engine modes:
   vocab to ``SPEC_SAMPLED_VOCAB``; ``--min-accept`` then gates against the
   analytic ceiling with CI-noise margin.
 
+* ``fused`` (``--fused``) — the Pallas fused FP4 decode path: packed-FP4
+  codes + scales held end-to-end, linears dispatched to the CASCADE matmul
+  kernel (and single-token attention to the decode kernel), measured
+  against a ``fp4`` jnp dequant-matmul baseline serving the SAME packed
+  weights. Fused rows add ``weight_stream_bytes_per_device``,
+  ``decode_bound_tokens_per_s`` (= max_batch / (weight_bytes / HBM_BW),
+  the weight-streaming decode ceiling) and ``fraction_of_bound`` — the
+  measured-vs-bound ratio ``benchmarks/report.py`` renders. On CPU the
+  kernels run in interpret mode, so the ratio is a smoke number; the
+  token-exactness contract is what tests/test_fused.py gates.
+
 Emits one JSON row per (arch, mode, batch) into ``--out`` in the same row
 style the roofline sweeps use (``arch``/``shape``/``status`` keys), so
 ``benchmarks/report.py`` renders it alongside the other tables.
@@ -92,6 +103,13 @@ WARMUP_STEPS = 3
 REPEATS = 3       # best-of-N throughput per mode: one noisy-neighbor burst
                   # on a shared CI runner must not fail the gate
 
+#: HBM bandwidth the weight-streaming decode bound divides by (TPUv4-class,
+#: matching the roofline sweeps). Deliberately DUPLICATED from
+#: benchmarks/roofline.py instead of imported: importing roofline pulls in
+#: repro.launch.dryrun, whose module-level host-device override would force
+#: this process onto 512 virtual devices
+HBM_BW = 819e9
+
 
 def _force_constant_argmax(params: dict) -> dict:
     """Zero the output head (tied archs: the embedding table) so greedy
@@ -141,10 +159,18 @@ def build_engine(family: str, mode: str, max_batch: int, draft_len: int = 4,
     params = model.init_params(jax.random.PRNGKey(0), ccfg)
     if mode == "spec":
         params = _force_constant_argmax(params)
+    if mode in ("fp4", "fused"):
+        # the FP4 serving format: packed codes + scales end-to-end; "fused"
+        # routes them through the Pallas kernels, "fp4" is its jnp
+        # dequant-matmul baseline (same weights, same numerics contract)
+        from repro.core import cascade
+        ccfg = CascadeConfig(mode="serve_fp4", compute_dtype=jnp.float32)
+        params = cascade.tree_to_serve_fp4(params, ccfg)
     scfg = ServeConfig(max_batch=max_batch, max_len=max_len,
                        batched=(mode != "slotwise"), prefill_chunk=PROMPT_LEN,
                        draft_len=(draft_len if mode == "spec" else 0),
-                       temperature=temperature, tp_policy=tp_policy)
+                       temperature=temperature, tp_policy=tp_policy,
+                       fused=(mode == "fused"))
     return cfg, ServeEngine(model, params, ccfg, scfg,
                             mesh=(mesh if mode == "mesh" else None))
 
@@ -170,6 +196,11 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
         assert eng.spec, "spec bench must take the speculative path"
         want = "spec-sampled" if temperature > 0 else "spec-greedy"
         assert eng.effective_mode == want, eng.effective_mode
+    if mode == "fused":
+        # never report a silently-downgraded run as a kernel measurement
+        assert eng.effective_mode.endswith("-fused"), (
+            f"fused bench downgraded: {eng.effective_mode} "
+            f"({'; '.join(eng.downgrades)})")
     eng.step_times.clear()                  # drop trace/compile steps from p50/p99
     best_dt, produced = float("inf"), 0
     for _ in range(REPEATS):                # best-of-N: robust to CPU bursts
@@ -198,6 +229,21 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
     if mode == "spec":
         row["draft_len"] = m["draft_len"]
         row["accepted_per_step"] = round(m["accepted_per_step"], 4)
+    if mode in ("fp4", "fused"):
+        row["weights"] = "fp4"
+    if mode == "fused":
+        # measured decode throughput vs the weight-streaming bound: decoding
+        # one token per slot must stream every live weight byte once, so the
+        # ceiling is max_batch / (weight_bytes / HBM_BW) tokens/s per device
+        # (paper Table 10's balance). On CPU CI the ratio is a smoke number
+        # (the bound assumes TPU HBM), but the FIELDS are the contract
+        # report.py renders
+        from repro.core.cascade import num_weight_bytes
+        wb = int(num_weight_bytes(eng.params))
+        bound = max_batch / (wb / HBM_BW)
+        row["weight_stream_bytes_per_device"] = wb
+        row["decode_bound_tokens_per_s"] = round(bound, 2)
+        row["fraction_of_bound"] = round(row["tokens_per_s"] / bound, 6)
     if temperature > 0:
         row["temperature"] = temperature
         row["vocab"] = cfg.vocab
@@ -240,6 +286,15 @@ def main():
                          "this temperature on a shrunken vocab "
                          f"({SPEC_SAMPLED_VOCAB}) so the uniform-p "
                          "acceptance ceiling stays measurable")
+    ap.add_argument("--fused", action="store_true",
+                    help="also bench the Pallas fused FP4 decode path "
+                         "against its jnp dequant-matmul baseline (same "
+                         "packed weights); fused rows report the measured-"
+                         "vs-weight-streaming-bound ratio")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="bench ONLY the fused + fp4-baseline rows (no "
+                         "slotwise/batched sweeps): the CI fused-decode leg "
+                         "gates kernel dispatch, not batching speedups")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="also bench the sharded engine on a (data, model) "
                          "host mesh, e.g. 4x2; cascade rows must show ZERO "
@@ -277,6 +332,13 @@ def main():
     if args.spec_only and (args.mesh_only or args.min_speedup > 0):
         ap.error("--spec-only skips the slotwise/batched sweeps; it is "
                  "incompatible with --mesh-only/--min-speedup")
+    if args.fused_only and not args.fused:
+        ap.error("--fused-only requires --fused")
+    if args.fused_only and (args.mesh_only or args.spec_only or args.spec
+                            or args.min_speedup > 0 or args.min_accept > 0):
+        ap.error("--fused-only skips every non-fused bench; it is "
+                 "incompatible with --spec/--mesh-only/--spec-only/"
+                 "--min-speedup/--min-accept")
 
     from repro.launch import mesh as meshlib
     if args.host_devices:
@@ -287,6 +349,23 @@ def main():
     for family in args.archs:
         for b in args.batches:
             bat = None
+            if args.fused or args.fused_only:
+                # jnp FP4 baseline first: same packed weights, same engine,
+                # kernel dispatch is the ONLY difference — so the speedup
+                # column isolates the kernel (on CPU CI, interpret-mode
+                # overhead; on TPU, the fused win)
+                fp4 = bench_mode(family, "fp4", b)
+                fu = bench_mode(family, "fused", b)
+                fu["speedup_vs_fp4_jnp"] = round(
+                    fu["tokens_per_s"] / max(fp4["tokens_per_s"], 1e-9), 2)
+                rows += [fp4, fu]
+                print(f"{family:12s} b={b:2d}  "
+                      f"fp4(jnp) {fp4['tokens_per_s']:9.1f} tok/s   "
+                      f"fused {fu['tokens_per_s']:9.1f} tok/s   "
+                      f"bound {fu['decode_bound_tokens_per_s']:11.1f} tok/s   "
+                      f"measured/bound {fu['fraction_of_bound']:.2e}")
+            if args.fused_only:
+                continue
             if not args.mesh_only and not args.spec_only:
                 slot = bench_mode(family, "slotwise", b)
                 bat = bench_mode(family, "batched", b)

@@ -206,9 +206,10 @@ def tree_to_serve_fp4(params, cfg: CascadeConfig):
     return conv(params)
 
 
-def num_weight_bytes(params: dict) -> int:
-    """HBM bytes of the weight payload (the quantity Table 10 balances)."""
-    total = 0
-    for k, v in params.items():
-        total += v.size * v.dtype.itemsize
-    return total
+def num_weight_bytes(params) -> int:
+    """HBM bytes of the weight payload (the quantity Table 10 balances):
+    every array leaf of the param tree at its storage dtype, so a serve_fp4
+    tree counts 1 byte per packed code pair plus its scales — the number the
+    weight-streaming decode bound divides by."""
+    return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(params))

@@ -208,11 +208,25 @@ def quantize_weight(
     column (a single group spanning all of K). Scales are chosen so the group
     absmax maps to FP4_MAX (=6.0).
 
+    Odd K (pad-to-pack): packing needs an even contraction dim, so an odd-K
+    matrix is padded with one all-zero row first (zeros encode to code 0 and
+    decode to exactly 0, so the pad contributes nothing to any product).
+    Consumers pad the activations with a matching zero column — see
+    ``kernels.ops.cascade_matmul`` / ``kernels.ref.cascade_matmul_ref``.
+    Only supported with per-column scales (group_size=0): the pad row joins
+    the single group without changing its absmax.
+
     Returns:
-      packed: (K//2, N) uint8, two K-adjacent codes per byte (low nibble = even row)
+      packed: (ceil(K/2), N) uint8, two K-adjacent codes per byte (low
+              nibble = even row)
       scales: (G, N) f32 with G = K//group_size (>= 1)
     """
     k, n = w.shape
+    if k % 2:
+        assert group_size == 0, "odd K needs per-column scales (group_size=0)"
+        w = jnp.concatenate([w.astype(jnp.float32),
+                             jnp.zeros((1, n), jnp.float32)], axis=0)
+        k += 1
     g = group_size if group_size > 0 else k
     assert k % g == 0, f"K={k} not divisible by group_size={g}"
     wg = w.reshape(k // g, g, n).astype(jnp.float32)
@@ -224,7 +238,10 @@ def quantize_weight(
 
 
 def dequantize_weight(packed: jax.Array, scales: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
-    """Inverse of :func:`quantize_weight` -> (K, N) dense weights."""
+    """Inverse of :func:`quantize_weight` -> (K, N) dense weights.
+
+    For an odd-K original the returned matrix keeps the zero pad row
+    (K+1 rows) — the codes alone cannot tell padded from real zeros."""
     codes = unpack_fp4(packed, axis=0)
     k, n = codes.shape
     g = k // scales.shape[0]

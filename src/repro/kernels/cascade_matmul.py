@@ -20,6 +20,20 @@ Block shapes default to (bm, bn, bk) = (128, 256, 512): MXU-aligned
 (multiples of 128); VMEM footprint per step =
   x tile 128*512*2B + packed w tile 256*256*1B + decoded 512*256*2B
   + acc 128*256*4B ~= 0.58 MB  << 16 MB VMEM (room for double buffering).
+
+Two numeric modes (``exact_dequant``):
+
+* **fast** (default, the TPU production path) — decode FP4 to bf16, feed the
+  MXU in bf16, apply the group scale to the (bm, bn) *product* once per
+  K-block (cheaper than scaling the (bk, bn) weight tile).
+* **exact** — decode to f32, scale the *weight tile* elementwise, cast to
+  ``compute_dtype`` and dot. With a single-block grid this performs literally
+  the same dequantize -> dot -> bias operations as the jnp serving path
+  (``quant.dequantize_weight`` + ``jnp.dot``), so interpret-mode results are
+  bit-identical to it — the token-exactness contract of the fused serving
+  path (``ServeConfig.fused``). In exact mode the scales input is pre-
+  expanded to per-row ``(K, N)`` so arbitrary group sizes broadcast exactly
+  like the jnp path.
 """
 from __future__ import annotations
 
@@ -45,7 +59,8 @@ def _decode_fp4_block(codes: jax.Array, dtype) -> jax.Array:
     return jnp.where(s == 1, -mag, mag).astype(dtype)
 
 
-def _kernel(x_ref, wq_ref, s_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
+def _kernel(x_ref, wq_ref, s_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype,
+            compute_dtype, exact_dequant: bool, has_bias: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -57,16 +72,27 @@ def _kernel(x_ref, wq_ref, s_ref, b_ref, o_ref, acc_ref, *, nk: int, out_dtype):
     hi = (packed >> 4) & jnp.uint8(0xF)
     bk2, bn = packed.shape
     codes = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)
-    w = _decode_fp4_block(codes, jnp.bfloat16)  # unscaled FP4 values
-    x = x_ref[...].astype(jnp.bfloat16)
-    prod = jnp.dot(x, w, preferred_element_type=jnp.float32)  # (bm, bn) fp32
-    # scale is constant across the K-block (group_size % bk == 0), applied to
-    # the (bm, bn) product: cheaper than scaling the (bk, bn) weight tile.
-    acc_ref[...] += prod * s_ref[...].astype(jnp.float32)
+    if exact_dequant:
+        # per-row (bk, bn) scales: the same elementwise dequant multiply as
+        # quant.dequantize_weight, then the dot in compute_dtype — with a
+        # single-block grid this is bit-identical to the jnp serving path
+        w = (_decode_fp4_block(codes, jnp.float32) * s_ref[...]).astype(compute_dtype)
+        x = x_ref[...].astype(compute_dtype)
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    else:
+        w = _decode_fp4_block(codes, jnp.bfloat16)  # unscaled FP4 values
+        x = x_ref[...].astype(jnp.bfloat16)
+        prod = jnp.dot(x, w, preferred_element_type=jnp.float32)  # (bm, bn) fp32
+        # scale is constant across the K-block (group_size % bk == 0), applied
+        # to the (bm, bn) product: cheaper than scaling the (bk, bn) weight tile.
+        acc_ref[...] += prod * s_ref[...].astype(jnp.float32)
 
     @pl.when(k == nk - 1)
     def _epilogue():
-        o_ref[...] = (acc_ref[...] + b_ref[...].astype(jnp.float32)).astype(out_dtype)
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        o_ref[...] = acc.astype(out_dtype)
 
 
 def cascade_matmul_pallas(
@@ -79,25 +105,43 @@ def cascade_matmul_pallas(
     block_n: int = 256,
     block_k: int = 512,
     out_dtype=jnp.float32,
+    compute_dtype=jnp.bfloat16,
+    exact_dequant: bool = False,
+    has_bias: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
-    """x: (M, K) bf16/f32; packed: (K//2, N) uint8; scales: (G, N) f32 with
-    group_size = K // G and group_size % block_k == 0; bias: (1, N) f32.
-    Returns (M, N) out_dtype."""
+    """x: (M, K) bf16/f32; packed: (K//2, N) uint8; bias: (1, N) f32.
+    Returns (M, N) out_dtype.
+
+    ``scales``: fast mode takes (G, N) f32 with group_size = K // G and
+    group_size % block_k == 0; exact mode (``exact_dequant=True``) takes
+    per-row (K, N) f32 (pre-expanded by the caller) so the weight tile is
+    dequantized exactly like ``quant.dequantize_weight`` before the dot.
+    ``has_bias=False`` skips the bias add entirely (matching the jnp path's
+    conditional add bit-for-bit; ``bias`` is still passed as zeros to keep
+    the call signature static)."""
     m, kdim = x.shape
     n = packed.shape[1]
-    g = scales.shape[0]
-    group_size = kdim // g
     assert packed.shape[0] * 2 == kdim
     assert m % block_m == 0 and n % block_n == 0 and kdim % block_k == 0, (
         f"unpadded dims ({m},{n},{kdim}) vs blocks ({block_m},{block_n},{block_k})")
-    assert group_size % block_k == 0, (
-        f"group_size {group_size} must be a multiple of block_k {block_k}")
+    if exact_dequant:
+        assert scales.shape == (kdim, n), (
+            f"exact mode needs per-row scales (K, N); got {scales.shape}")
+        scale_spec = pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j))
+    else:
+        group_size = kdim // scales.shape[0]
+        assert group_size % block_k == 0, (
+            f"group_size {group_size} must be a multiple of block_k {block_k}")
+        scale_spec = pl.BlockSpec(
+            (1, block_n), lambda i, j, k, gs=group_size, bk=block_k: (k * bk // gs, j))
     nk = kdim // block_k
 
     grid = (m // block_m, n // block_n, nk)
 
-    kernel = functools.partial(_kernel, nk=nk, out_dtype=out_dtype)
+    kernel = functools.partial(_kernel, nk=nk, out_dtype=out_dtype,
+                               compute_dtype=compute_dtype,
+                               exact_dequant=exact_dequant, has_bias=has_bias)
     kwargs = {}
     if pltpu is not None and not interpret:
         params_cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
@@ -110,7 +154,7 @@ def cascade_matmul_pallas(
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
             pl.BlockSpec((block_k // 2, block_n), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, block_n), lambda i, j, k, gs=group_size, bk=block_k: (k * bk // gs, j)),
+            scale_spec,
             pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),

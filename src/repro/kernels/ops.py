@@ -30,7 +30,8 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret",
+                     "exact_dequant"),
 )
 def cascade_matmul(
     x: jax.Array,
@@ -43,21 +44,52 @@ def cascade_matmul(
     block_k: int = 512,
     out_dtype=jnp.float32,
     interpret: bool | None = None,
+    exact_dequant: bool | None = None,
 ) -> jax.Array:
     """FP4-packed weight matmul: x (.., K) @ Wq (K, N) -> (.., N).
 
     Leading dims of x are flattened to M and padded to block_m; K and N must
     already be block-aligned (true for every assigned architecture dim).
+    Odd-K weights (quantize_weight zero-row pad-to-pack) are handled by
+    padding the activations with a matching zero column.
+
+    ``exact_dequant`` defaults to the resolved ``interpret`` value: compiled
+    (TPU) runs the fast bf16-MXU kernel; interpret mode (CPU/CI) runs a
+    single-block grid whose kernel body performs the same dequantize ->
+    dot -> bias operations as the jnp serving path on the same shapes, so
+    results are bit-identical to ``cascade.linear_apply``'s XLA branch —
+    the fused serving path's token-exactness contract.
     """
     if interpret is None:
         interpret = not _on_tpu()
+    if exact_dequant is None:
+        exact_dequant = interpret
     lead = x.shape[:-1]
     kdim = x.shape[-1]
     n = packed.shape[1]
     x2 = x.reshape(-1, kdim)
     m = x2.shape[0]
-    x2 = _pad_to(x2, 0, block_m)
+    if packed.shape[0] * 2 == kdim + 1:
+        # odd-K weights carry quantize_weight's zero pad row: give the
+        # activations a matching zero column (contributes nothing to the dot)
+        x2 = jnp.pad(x2, ((0, 0), (0, 1)))
+        kdim += 1
     bias2 = jnp.zeros((1, n), jnp.float32) if bias is None else bias.reshape(1, n).astype(jnp.float32)
+    if exact_dequant:
+        assert interpret, "exact_dequant is the interpret-mode parity path"
+        # single-block grid on the unpadded operands (interpret mode needs no
+        # block alignment); per-row scales broadcast exactly like the jnp
+        # dequant's group reshape
+        group = kdim // scales.shape[0]
+        s_full = jnp.repeat(scales, group, axis=0)          # (K, N)
+        out = _cm.cascade_matmul_pallas(
+            x2, packed, s_full, bias2,
+            block_m=x2.shape[0], block_n=n, block_k=kdim,
+            out_dtype=out_dtype, compute_dtype=out_dtype,
+            exact_dequant=True, has_bias=bias is not None, interpret=True,
+        )
+        return out.reshape(*lead, n)
+    x2 = _pad_to(x2, 0, block_m)
     # shrink blocks if dims are small (smoke configs)
     bm = min(block_m, x2.shape[0])
     bn = block_n if n % block_n == 0 else n
@@ -89,6 +121,31 @@ def flash_attention(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "block_t", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    *,
+    scale: float | None = None,
+    block_t: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Decode-step attention on a stacked cache. q: (B, Hq, D) — one query
+    token per slot; k/v: (B, T, Hkv, D) cache buffers; valid: (B, T) nonzero
+    where the slot holds a real key. Returns (B, Hq, D) f32.
+
+    Interpret mode (CPU/CI) runs the exact single-block kernel —
+    bit-identical to the jnp decode attention in ``layers.attn_apply``;
+    compiled (TPU) streams over T blocks with running-softmax scratch."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _fa.decode_attention_pallas(
+        q, k, v, valid, scale=scale, block_t=block_t,
+        exact=interpret, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool | None = None):
     """Per-head SSD recurrence (inputs pre-broadcast per head). (BH,S,P)."""
@@ -100,4 +157,5 @@ def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool | None = Non
 # Re-exported oracles (tests and low-stakes call sites)
 cascade_matmul_ref = _ref.cascade_matmul_ref
 flash_attention_ref = _ref.flash_attention_ref
+decode_attention_ref = _ref.decode_attention_ref
 ssd_scan_ref = _ref.ssd_scan_ref

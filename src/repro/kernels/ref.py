@@ -17,9 +17,13 @@ def cascade_matmul_ref(
     """Oracle for the fast (fp32-accumulating) CASCADE matmul.
 
     x: (M, K) activations; packed: (K//2, N) FP4 codes; scales: (G, N).
-    Dequantizes to f32 and matmuls with f32 accumulation.
+    Dequantizes to f32 and matmuls with f32 accumulation. Odd-K weights
+    (``quant.quantize_weight`` zero-row pad-to-pack) are matched by padding
+    the activations with a zero column, like ``ops.cascade_matmul``.
     """
     w = quant.dequantize_weight(packed, scales, dtype=jnp.float32)
+    if w.shape[0] == x.shape[-1] + 1:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, 1)])
     out = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
     if bias is not None:
         out = out + bias.astype(jnp.float32)
@@ -45,6 +49,28 @@ def flash_attention_ref(
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
     return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, valid: jax.Array,
+    scale: float | None = None,
+) -> jax.Array:
+    """Oracle for the decode-attention kernel: one query token per batch row
+    against a stacked cache. q: (B, Hq, D); k/v: (B, T, Hkv, D); valid:
+    (B, T) nonzero where the slot holds a real key. The SAME masked-softmax
+    math as the jnp decode path in ``models.layers.attn_apply`` (mask via
+    ``where`` at -1e30, softmax, value contraction). Returns (B, Hq, D) f32.
+    """
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qd = q.astype(jnp.float32).reshape(b, 1, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qd, k.astype(jnp.float32)) * scale
+    logits = jnp.where((valid != 0)[:, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d)
 
 
 def ssd_scan_ref(

@@ -38,6 +38,11 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--no-fp4", action="store_true", help="serve bf16 baseline")
+    ap.add_argument("--fused", action="store_true",
+                    help="route decode/extend/verify through the Pallas "
+                         "kernels (packed-FP4 matmul + decode attention); "
+                         "needs FP4 params — incompatible with --no-fp4 and "
+                         "--mesh (downgrades with a warning)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="> 0 enables seeded sampling (default: greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -84,7 +89,7 @@ def main():
                        max_len=args.prompt_len + args.max_new + 1,
                        temperature=args.temperature, top_k=args.top_k,
                        draft_len=args.draft_len, ngram_max=args.ngram_max,
-                       tp_policy=args.tp_policy)
+                       tp_policy=args.tp_policy, fused=args.fused)
     eng = ServeEngine(model, params, ccfg, scfg, mesh=mesh)
 
     # never let "nothing was checked" look like "the invariant holds"

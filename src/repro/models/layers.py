@@ -315,12 +315,23 @@ def attn_apply(
             valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]        # (B, s, T)
             new_cache = {"k": ck, "v": cv, "pos": pos + nv}
             att_k, att_v = ck, cv
-        qd = q.astype(jnp.float32).reshape(b, s, hk, h // hk, hd)
-        logits = jnp.einsum("bshgd,bthd->bhgst", qd, att_k.astype(jnp.float32)) * scale
-        # valid: (B, s, T[+s]) (or (B, 1, T) ring) -> broadcast vs (b,hk,g,s,t)
-        logits = jnp.where(valid[:, None, None], logits, -1e30)
-        p = jax.nn.softmax(logits, axis=-1)
-        o = jnp.einsum("bhgst,bthd->bshgd", p, att_v.astype(jnp.float32)).reshape(b, s, h, hd)
+        if ccfg.use_kernel and mode == "decode" and s == 1:
+            # fused serving path: the Pallas decode-attention kernel over the
+            # stacked cache (mask-as-validity covers full caches and ring
+            # buffers alike). Interpret mode runs the exact single-block
+            # kernel, bit-identical to the jnp math below; compiled TPU runs
+            # the streaming-softmax kernel. extend/verify chunks (s > 1)
+            # keep the jnp path — the fused step is the decode hot loop.
+            from repro.kernels import ops  # lazy: keeps dryrun import-light
+            o = ops.decode_attention(q[:, 0], att_k, att_v, valid[:, 0],
+                                     scale=scale).reshape(b, s, h, hd)
+        else:
+            qd = q.astype(jnp.float32).reshape(b, s, hk, h // hk, hd)
+            logits = jnp.einsum("bshgd,bthd->bhgst", qd, att_k.astype(jnp.float32)) * scale
+            # valid: (B, s, T[+s]) (or (B, 1, T) ring) -> broadcast vs (b,hk,g,s,t)
+            logits = jnp.where(valid[:, None, None], logits, -1e30)
+            p = jax.nn.softmax(logits, axis=-1)
+            o = jnp.einsum("bhgst,bthd->bshgd", p, att_v.astype(jnp.float32)).reshape(b, s, h, hd)
     else:
         if cfg.q_chunk > 0 and s > cfg.q_chunk:
             o = _chunked_causal_sdpa(q, k, v, scale, cfg.q_chunk, cfg.window)

@@ -268,6 +268,12 @@ class ServeConfig:
                                   # 'cascade' (column-parallel, zero partial-
                                   # sum all-reduce) or 'megatron' (row+column
                                   # baseline with the classic all-reduce)
+    fused: bool = False           # route decode/extend/verify through the
+                                  # Pallas kernels (packed-FP4 matmul +
+                                  # decode attention). Needs serve_fp4
+                                  # params and the batched path; interpret
+                                  # mode keeps it runnable (and token-exact
+                                  # vs the jnp path) on CPU
 
 
 @dataclasses.dataclass
@@ -396,6 +402,35 @@ class ServeEngine:
             raise ValueError(
                 "mesh serving requires the batched stacked-cache path "
                 "(batched=True and a model exposing write_cache/prefill_extend)")
+        # fused decode: flip use_kernel ON in the ccfg the jitted closures
+        # below capture, so decode, chunked prefill-extend and spec verify
+        # all route linears through the packed-FP4 Pallas matmul (and
+        # single-token decode attention through the decode kernel). The
+        # weights stay packed codes+scales end-to-end — dequantization
+        # happens per-tile inside the kernel, never as a materialized dense
+        # tree. Downgrades (don't crash, record + warn) when the
+        # prerequisites are missing.
+        self.fused = False
+        if scfg.fused:
+            if ccfg.mode != "serve_fp4":
+                _downgrade(
+                    f"fused decode requested but ccfg.mode={ccfg.mode!r} — "
+                    "the FP4 kernel path needs packed serve_fp4 params "
+                    "(codes+scales); running the jnp path")
+            elif not self.batched:
+                _downgrade(
+                    "fused decode requested but the engine runs the "
+                    "slot-wise loop — fused dispatch needs the batched "
+                    "stacked-cache path; running the jnp path")
+            elif mesh is not None:
+                _downgrade(
+                    "fused decode requested with a device mesh — Pallas "
+                    "calls inside GSPMD-partitioned steps are unsupported; "
+                    "running the jnp path")
+            else:
+                self.fused = True
+                ccfg = dataclasses.replace(ccfg, use_kernel=True)
+                self.ccfg = ccfg
         if self.batched:
             # round the cache length up to a chunk multiple so padded chunk
             # writes never clamp into (and clobber) valid cache entries; a
@@ -899,11 +934,12 @@ class ServeEngine:
     @property
     def effective_mode(self) -> str:
         """The decode path this engine ACTUALLY runs (downgrades included):
-        '{spec|batched|slotwise}-{greedy|sampled}'. Benches and tests
-        assert on this instead of trusting the requested config."""
+        '{spec|batched|slotwise}-{greedy|sampled}[-fused]'. Benches and
+        tests assert on this instead of trusting the requested config."""
         decode = ("spec" if self.spec
                   else "batched" if self.batched else "slotwise")
-        return f"{decode}-{'sampled' if self._sampled else 'greedy'}"
+        mode = f"{decode}-{'sampled' if self._sampled else 'greedy'}"
+        return f"{mode}-fused" if self.fused else mode
 
     def metrics(self) -> dict:
         """Throughput/latency counters for the dashboard & benchmarks."""
@@ -916,6 +952,7 @@ class ServeEngine:
             "mesh": dict(self.mesh.shape) if self.mesh is not None else None,
             "tp_policy": self.tp_policy if self.mesh is not None else None,
             "spec": self.spec,
+            "fused": self.fused,
             "draft_len": self._draft_len,
             "draft_tokens_accepted": self._accepted_drafts,
             # mean drafted tokens accepted per (slot, step); +1 bonus token

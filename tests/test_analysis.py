@@ -130,3 +130,43 @@ def test_train_and_serve_cli_subprocess():
          "--smoke", "--requests", "3", "--max-batch", "2", "--max-new", "4"],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
     assert s.returncode == 0 and "served 3 requests" in s.stdout, s.stdout[-400:] + s.stderr[-400:]
+
+
+# ---------------------------------------------------------------------------
+# report.py loaders: schema tolerance
+# ---------------------------------------------------------------------------
+
+def test_report_load_tolerates_missing_keys(tmp_path):
+    """Rows from older sweeps may lack arch/shape; load() must key them
+    under '?' instead of KeyError-ing the whole report away."""
+    sys.path.insert(0, REPO)
+    from benchmarks import report
+
+    p = tmp_path / "roof.json"
+    p.write_text(json.dumps([
+        {"arch": "a1", "shape": "s1", "status": "ok"},
+        {"status": "ok", "decode_bound_tokens_per_s": 5.0},   # legacy row
+    ]))
+    d = report.load(str(p))
+    assert ("a1", "s1") in d and ("?", "?") in d
+    assert report.load(str(tmp_path / "missing.json")) == {}
+
+
+def test_report_fused_table_tolerates_missing_bound_fields():
+    """A fused row without weight_stream_bytes_per_device renders with a
+    0.00 GB cell — the table never drops because one field is absent."""
+    sys.path.insert(0, REPO)
+    from benchmarks import report
+
+    rows = [
+        {"mode": "fused", "family": "transformer", "max_batch": 2,
+         "tokens_per_s": 100.0, "decode_bound_tokens_per_s": 1000.0,
+         "fraction_of_bound": 0.1},                # no weight_stream bytes
+        {"mode": "fp4", "family": "transformer", "max_batch": 2,
+         "tokens_per_s": 80.0},
+    ]
+    lines = report.fused_lines(rows)
+    row = [l for l in lines if l.startswith("| transformer")]
+    assert len(row) == 1
+    assert "0.00" in row[0] and "100.0" in row[0] and "80.0" in row[0]
+    assert report.fused_lines([{"mode": "batched"}]) == []

@@ -1,0 +1,135 @@
+"""Fused FP4 decode path: token-exactness, downgrades, mode reporting.
+
+The fused engine (``ServeConfig.fused``) routes every linear through the
+packed-FP4 Pallas matmul and single-token attention through the decode
+kernel. In interpret mode (CPU/CI) the kernels run their exact paths, so
+the contract is TOKEN-EXACT parity with the jnp serve_fp4 engine — greedy,
+speculative, and sampled — not allclose.
+"""
+import jax
+
+# sampled parity compares engines constructed in one process: the flag must
+# flip BEFORE any params are drawn, or the first engine's construction
+# re-bases every later realization (see the engine's construction warning)
+jax.config.update("jax_threefry_partitionable", True)
+jax.config.update("jax_platform_name", "cpu")
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cascade
+from repro.core.cascade import CascadeConfig
+from repro.models import registry
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+CCFG_TRAIN = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+CCFG_FP4 = CascadeConfig(mode="serve_fp4", compute_dtype=jnp.float32)
+
+
+def _fp4_load(arch):
+    cfg, model = registry.load(arch, smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG_TRAIN)
+    return cfg, model, cascade.tree_to_serve_fp4(params, CCFG_FP4)
+
+
+@pytest.fixture(scope="module")
+def fp4_transformer():
+    return _fp4_load("codeqwen1.5-7b")
+
+
+def _serve(model, params, cfg, *, fused, ccfg=CCFG_FP4, draft_len=0,
+           temperature=0.0, batched=True, max_new=10, n_req=3):
+    scfg = ServeConfig(max_batch=2, max_len=40, fused=fused, batched=batched,
+                       draft_len=draft_len, temperature=temperature, top_k=8)
+    eng = ServeEngine(model, params, ccfg, scfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n_req)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return eng, [list(r.tokens_out) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# token-exact parity, per registry family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(registry.FAMILY_SMOKE))
+def test_fused_greedy_token_exact(family):
+    """Every serving family emits exactly the jnp engine's greedy tokens
+    when decode routes through the kernels."""
+    cfg, model, params = _fp4_load(registry.FAMILY_SMOKE[family])
+    _, ref = _serve(model, params, cfg, fused=False)
+    eng, out = _serve(model, params, cfg, fused=True)
+    assert eng.fused and eng.effective_mode == "batched-greedy-fused"
+    assert not eng.downgrades
+    assert out == ref
+
+
+def test_fused_spec_token_exact(fp4_transformer):
+    """Speculative decode (draft + verify + rewind) through the fused
+    dispatch commits exactly the jnp spec engine's tokens."""
+    cfg, model, params = fp4_transformer
+    _, ref = _serve(model, params, cfg, fused=False, draft_len=3)
+    eng, out = _serve(model, params, cfg, fused=True, draft_len=3)
+    assert eng.effective_mode == "spec-greedy-fused"
+    assert out == ref
+
+
+def test_fused_sampled_token_exact(fp4_transformer):
+    """Seeded sampling: bit-identical logits + the same fold_in draw order
+    means identical realizations, so sampled streams match token-for-token."""
+    cfg, model, params = fp4_transformer
+    _, ref = _serve(model, params, cfg, fused=False, temperature=0.7)
+    eng, out = _serve(model, params, cfg, fused=True, temperature=0.7)
+    assert eng.effective_mode == "batched-sampled-fused"
+    assert out == ref
+
+
+def test_fused_spec_sampled_token_exact(fp4_transformer):
+    """Speculative SAMPLING (rejection resampling) through the fused verify
+    dispatch stays realization-exact with the jnp engine."""
+    cfg, model, params = fp4_transformer
+    _, ref = _serve(model, params, cfg, fused=False, draft_len=3,
+                    temperature=0.7)
+    eng, out = _serve(model, params, cfg, fused=True, draft_len=3,
+                      temperature=0.7)
+    assert eng.effective_mode == "spec-sampled-fused"
+    assert out == ref
+
+
+# ---------------------------------------------------------------------------
+# downgrades: never silently run a different path than reported
+# ---------------------------------------------------------------------------
+
+def test_fused_downgrades_without_fp4_params():
+    """fused + train-format params can't take the kernel path: the engine
+    must record the downgrade and report an un-suffixed effective_mode."""
+    cfg, model = registry.load("codeqwen1.5-7b", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG_TRAIN)
+    with pytest.warns(RuntimeWarning, match="fused decode requested"):
+        eng, _ = _serve(model, params, cfg, fused=True, ccfg=CCFG_TRAIN,
+                        max_new=2, n_req=1)
+    assert not eng.fused
+    assert eng.effective_mode == "batched-greedy"
+    assert any("fused" in d for d in eng.downgrades)
+
+
+def test_fused_downgrades_on_slotwise_path(fp4_transformer):
+    cfg, model, params = fp4_transformer
+    with pytest.warns(RuntimeWarning, match="fused decode requested"):
+        eng, _ = _serve(model, params, cfg, fused=True, batched=False,
+                        max_new=2, n_req=1)
+    assert not eng.fused
+    assert not eng.effective_mode.endswith("-fused")
+
+
+def test_fused_metrics_flag(fp4_transformer):
+    cfg, model, params = fp4_transformer
+    eng, _ = _serve(model, params, cfg, fused=True, max_new=2, n_req=1)
+    m = eng.metrics()
+    assert m["fused"] is True
+    assert m["effective_mode"].endswith("-fused")

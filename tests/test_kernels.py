@@ -24,7 +24,8 @@ def test_cascade_matmul_vs_ref(m, k, n, bm, bn, bk, xdtype):
     x = (jax.random.normal(jax.random.PRNGKey(1), (m, k)) * 0.5).astype(xdtype)
     bias = jax.random.normal(jax.random.PRNGKey(2), (n,))
     out_k = ops.cascade_matmul(x, packed, scales, bias,
-                               block_m=bm, block_n=bn, block_k=bk, interpret=True)
+                               block_m=bm, block_n=bn, block_k=bk,
+                               interpret=True, exact_dequant=False)
     out_r = ops.cascade_matmul_ref(x, packed, scales, bias)
     # the kernel feeds the MXU in bf16 BY DESIGN (TPU path); XLA-CPU's bf16
     # dot is nondeterministically exact-or-rounded, so tolerances are bf16-scale
@@ -36,7 +37,8 @@ def test_cascade_matmul_batched_leading_dims():
     w = jax.random.normal(key, (64, 32)) * 0.1
     packed, scales = quant.quantize_weight(w)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 64))
-    out = ops.cascade_matmul(x, packed, scales, block_m=8, block_n=32, block_k=64, interpret=True)
+    out = ops.cascade_matmul(x, packed, scales, block_m=8, block_n=32, block_k=64,
+                             interpret=True, exact_dequant=False)
     ref = ops.cascade_matmul_ref(x.reshape(-1, 64), packed, scales).reshape(2, 5, 32)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-2, rtol=3e-2)
 
@@ -47,7 +49,8 @@ def test_cascade_matmul_groupwise_scales():
     packed, scales = quant.quantize_weight(w, group_size=32)
     assert scales.shape == (4, n)
     x = jax.random.normal(jax.random.PRNGKey(4), (16, k)) * 0.5
-    out = ops.cascade_matmul(x, packed, scales, block_m=16, block_n=32, block_k=32, interpret=True)
+    out = ops.cascade_matmul(x, packed, scales, block_m=16, block_n=32, block_k=32,
+                             interpret=True, exact_dequant=False)
     ref = ops.cascade_matmul_ref(x, packed, scales)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-2, rtol=3e-2)
 
@@ -111,3 +114,96 @@ def test_ssd_scan_kernel_vs_ref(bh, s, p, n, chunk):
         xx[:, None, :], dd[:, None], aa[None], bb[:, None, :], cc[:, None, :],
         ddk[None])[:, 0, :])(x, dt, A, B, C, D)
     np.testing.assert_allclose(np.asarray(out), np.asarray(refout), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# exact interpret-mode paths: the fused serving contract is BIT-parity with
+# the jnp serve path, not allclose
+# ---------------------------------------------------------------------------
+
+def _jnp_serve_matmul(x, packed, scales, bias, out_dtype=jnp.float32):
+    """Replicates cascade.linear_apply's serve_fp4 XLA branch (the oracle
+    the exact kernel must match bit-for-bit)."""
+    w = quant.dequantize_weight(packed, scales, out_dtype)
+    if w.shape[0] == x.shape[-1] + 1:   # odd-K pad-to-pack zero row
+        x = jnp.pad(x, ((0, 0), (0, 1)))
+    out = jnp.dot(x.astype(out_dtype), w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias
+    return out.astype(out_dtype)
+
+
+@pytest.mark.parametrize("m,k,n,group,use_bias", [
+    (4, 256, 512, 0, True),
+    (7, 96, 130, 0, False),
+    (12, 128, 64, 32, True),    # grouped scales
+    (3, 255, 66, 0, True),      # odd K: quantize_weight pad-to-pack
+])
+def test_cascade_matmul_exact_bit_parity(m, k, n, group, use_bias):
+    key = jax.random.PRNGKey(m * 131 + k)
+    w = jax.random.normal(key, (k, n)) * 0.1
+    packed, scales = quant.quantize_weight(w, group_size=group)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k)) * 0.5
+    bias = jax.random.normal(jax.random.PRNGKey(2), (n,)) if use_bias else None
+    out = ops.cascade_matmul(x, packed, scales, bias, interpret=True)
+    ref = jax.jit(lambda *a: _jnp_serve_matmul(*a, bias))(x, packed, scales)
+    assert bool(jnp.all(out == ref)), float(jnp.max(jnp.abs(out - ref)))
+
+
+def test_cascade_matmul_exact_requires_interpret():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16)) * 0.1
+    packed, scales = quant.quantize_weight(w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    with pytest.raises(AssertionError):
+        ops.cascade_matmul(x, packed, scales, interpret=False,
+                           exact_dequant=True)
+
+
+def _decode_attn_inputs(b, hq, hkv, t, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+    valid = (jax.random.uniform(ks[3], (b, t)) > 0.3).astype(jnp.int32)
+    return q, k, v, valid.at[:, 0].set(1)   # >= 1 live slot per row
+
+
+@pytest.mark.parametrize("b,hq,hkv,t,d", [
+    (3, 8, 2, 17, 32),    # GQA, ragged T
+    (1, 6, 3, 5, 8),
+    (2, 4, 4, 64, 16),    # MHA (group=1) — the einsum-lowering trap shape
+    (1, 2, 1, 1, 4),      # single cache slot
+])
+def test_decode_attention_exact_bit_parity(b, hq, hkv, t, d):
+    q, k, v, valid = _decode_attn_inputs(b, hq, hkv, t, d, seed=b * 7 + t)
+    out = ops.decode_attention(q, k, v, valid)          # interpret => exact
+    ref = jax.jit(ops.decode_attention_ref)(q, k, v, valid)
+    assert bool(jnp.all(out == ref)), float(jnp.max(jnp.abs(out - ref)))
+
+
+@pytest.mark.parametrize("b,hq,hkv,t,d,bt", [
+    (3, 8, 2, 100, 32, 32),   # T padded to block multiple
+    (2, 4, 4, 64, 16, 16),
+    (1, 6, 3, 7, 8, 4),
+])
+def test_decode_attention_streaming_vs_ref(b, hq, hkv, t, d, bt):
+    from repro.kernels.flash_attention import decode_attention_pallas
+    q, k, v, valid = _decode_attn_inputs(b, hq, hkv, t, d, seed=t)
+    out = decode_attention_pallas(q, k, v, valid, block_t=bt,
+                                  exact=False, interpret=True)
+    ref = ops.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_streaming_fully_masked_block():
+    """A trailing cache block with zero live slots must not pollute the
+    running softmax denominator (exp(0)=1 guard in the kernel)."""
+    from repro.kernels.flash_attention import decode_attention_pallas
+    q, k, v, valid = _decode_attn_inputs(2, 4, 2, 64, 16, seed=5)
+    valid = valid.at[:, 32:].set(0)        # second 32-block fully dead
+    out = decode_attention_pallas(q, k, v, valid, block_t=32,
+                                  exact=False, interpret=True)
+    ref = ops.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

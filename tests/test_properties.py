@@ -199,3 +199,30 @@ def test_sparsity_survives_fp4_quantization(seed, density):
     assert np.all(np.asarray(wq)[~np.asarray(mask)] == 0.0)
     stats = sparsity.sparsity_stats(wq)
     assert stats["sparsity"] >= 1.0 - density - 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(_seeds, st.integers(1, 9), st.integers(3, 130), st.integers(1, 40))
+def test_packed_matmul_matches_ref_random_shapes(seed, m, k, n):
+    """ops.cascade_matmul on arbitrary (M, K, N) — odd K included, which
+    exercises quantize_weight's zero-row pad-to-pack and the matching
+    activation pad — agrees with the ref.py dequant-matmul oracle."""
+    from repro.kernels import ops
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    w = jax.random.normal(keys[0], (k, n)) * 0.2
+    packed, scales = quant.quantize_weight(w)
+    x = jax.random.normal(keys[1], (m, k))
+    out = ops.cascade_matmul(x, packed, scales, interpret=True)
+    ref = ops.cascade_matmul_ref(x, packed, scales)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=16, max_size=16))
+def test_fp4_code_lists_roundtrip_through_values(codes):
+    """Arbitrary code vectors survive decode -> encode bit-exactly (the
+    16-point E2M1 grid is a codec fixed point, signs included)."""
+    c = jnp.asarray(codes, jnp.uint8)[:, None]
+    assert bool(jnp.all(quant.fp4_encode(quant.fp4_decode(c)) == c))

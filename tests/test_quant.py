@@ -148,3 +148,31 @@ def test_fake_quant_fp4_forward_is_quantized():
     packed, scales = quant.quantize_weight(w)
     wd = quant.dequantize_weight(packed, scales, jnp.float32)
     np.testing.assert_allclose(np.asarray(fq), np.asarray(wd), atol=1e-6)
+
+
+def test_fp4_all_codes_full_chain_roundtrip():
+    """All 16 codes survive the FULL serving chain bit-exactly:
+    decode -> fp4_round fixed point -> encode -> pack -> unpack."""
+    codes = jnp.arange(16, dtype=jnp.uint8).reshape(8, 2)
+    vals = quant.fp4_decode(codes)
+    # every representable value is a fixed point of the RNE rounder
+    np.testing.assert_array_equal(np.asarray(quant.fp4_round(vals)),
+                                  np.asarray(vals))
+    re = quant.fp4_encode(vals)
+    assert bool(jnp.all(re == codes))
+    packed = quant.pack_fp4(re, 0)
+    assert packed.dtype == jnp.uint8 and packed.shape == (4, 2)
+    assert bool(jnp.all(quant.unpack_fp4(packed, 0) == codes))
+
+
+def test_quantize_weight_odd_k_pads_zero_row():
+    """Odd-K weights pack via one all-zero pad row; dequantize returns the
+    padded (K+1)-row matrix whose extra row is exactly zero."""
+    w = jax.random.normal(jax.random.PRNGKey(7), (33, 6)) * 0.3
+    packed, scales = quant.quantize_weight(w)
+    assert packed.shape == (17, 6)
+    deq = quant.dequantize_weight(packed, scales, jnp.float32)
+    assert deq.shape == (34, 6)
+    np.testing.assert_array_equal(np.asarray(deq[-1]), np.zeros(6, np.float32))
+    with pytest.raises(AssertionError):
+        quant.quantize_weight(w, group_size=3)   # grouped scales need even K
