@@ -35,6 +35,64 @@ def serving_rows():
     return rows
 
 
+def traffic_rows():
+    """All live-traffic bench rows: every ``results/bench_traffic*.json``
+    (the CI traffic-slo leg writes virtual + wall siblings). Kept out of
+    ``serving_rows`` — traffic rows have no tokens/s column and would
+    render as dashes in the throughput table."""
+    import glob
+    rows = []
+    for p in sorted(glob.glob("results/bench_traffic*.json")):
+        rows += json.load(open(p))
+    return rows
+
+
+def traffic_lines(rows):
+    """Markdown lines for the SLO-attainment table ('' if no traffic rows).
+    Schema-tolerant like the other loaders: missing latency/accounting
+    fields render as dashes, not KeyErrors."""
+    trows = [r for r in rows if str(r.get("mode", "")).startswith("traffic")]
+    if not trows:
+        return []
+
+    def ms(r, k):
+        v = r.get(k)
+        return f"{v * 1e3:.1f}" if isinstance(v, (int, float)) else "—"
+
+    lines = [
+        "",
+        "## Live traffic: SLO attainment under open-loop load "
+        "(benchmarks/traffic.py)",
+        "",
+        "Open-loop Poisson arrivals routed over N replicas by "
+        "serve/router.py; TTFT charges queueing delay from ARRIVAL, not "
+        "dispatch, and shed/rejected requests count as SLO misses. "
+        "'virtual' rows run the deterministic VirtualClock (same seed => "
+        "identical percentiles — the gateable numbers); wall rows are "
+        "CPU-smoke real time.",
+        "",
+        "| family | replicas | batch | rate req/s | clock "
+        "| ttft p50/p99 ms | inter-token p50/p99 ms | SLO attainment "
+        "| finished/shed/rejected | kills |",
+        "|" + "---|" * 10,
+    ]
+    for r in sorted(trows, key=lambda x: (str(x.get("family", "?")),
+                                          str(x.get("mode", "?")),
+                                          str(x.get("replicas", "?")))):
+        clock = ("virtual" if r.get("mode") == "traffic-virtual" else "wall")
+        acct = (f"{r.get('requests_finished', '—')}/"
+                f"{r.get('requests_shed', '—')}/"
+                f"{r.get('requests_rejected', '—')}")
+        kills = len(r.get("kills") or []) or "—"
+        lines.append(
+            f"| {r.get('family', '?')} | {r.get('replicas', '—')} "
+            f"| {r.get('max_batch', '—')} | {r.get('rate_rps', '—')} "
+            f"| {clock} | {ms(r, 'ttft_p50_s')}/{ms(r, 'ttft_p99_s')} "
+            f"| {ms(r, 'inter_token_p50_s')}/{ms(r, 'inter_token_p99_s')} "
+            f"| {r.get('slo_attainment', '—')} | {acct} | {kills} |")
+    return lines
+
+
 def fused_lines(rows):
     """Markdown lines for the fused-FP4 measured-vs-bound table ('' if no
     fused rows). Tolerant of rows missing the bound fields: a fused row
@@ -200,6 +258,9 @@ def main():
                   f"| {r['decode_bound_tokens_per_s']} | {gb:.2f} | {mcell} |")
 
     for line in fused_lines(rows):
+        print(line)
+
+    for line in traffic_lines(traffic_rows()):
         print(line)
 
     # CASCADE invariant check: forward graphs with zero all-reduce bytes

@@ -1,0 +1,197 @@
+"""Live-traffic bench: N replicas under a seeded Poisson trace, gated on SLO.
+
+The serving bench measures steady-state decode throughput of one engine;
+this bench measures what a client of the RACK sees — per-request TTFT and
+inter-token latency percentiles, SLO attainment, shed/reject accounting —
+when an open-loop arrival process the system does not control is routed
+over ``elastic.ReplicaSet`` by ``serve/router.py``. Tail latency under
+load is the metric that separates rack-scale serving from batch
+benchmarks (ZettaLith Sections 2/19; the serving-scaling survey in
+PAPERS.md), so this is the layer the CI ``traffic-slo`` leg gates.
+
+Two clock modes:
+
+* default (wall) — replicas step in real time, arrivals are real sleeps:
+  the latency numbers are genuine wall-clock CPU-smoke measurements
+  (noisy on shared runners; gate with generous margins);
+* ``--virtual`` — a ``VirtualClock`` with a fixed ``--step-cost-ms`` per
+  replica step: the run is DETERMINISTIC (same seed => byte-identical
+  percentiles), so ``--min-slo-attainment`` can gate tightly in CI.
+
+``--kill AT_S:REPLICA`` injects fail-in-place events mid-trace; the row
+records them and the run still counts every stream's tokens (failover is
+token-exact — pinned by tests/test_router.py, measured here).
+
+Emits rows in the roofline/serving row style (``arch``/``shape``/
+``status``/``mode`` keys) into ``--out``; ``benchmarks/report.py`` joins
+``results/bench_traffic*.json`` into the SLO-attainment table.
+
+Run: PYTHONPATH=src:. python -m benchmarks.traffic \
+        [--arch transformer] [--replicas 2] [--rate 20] [--n-requests 48]
+        [--slo-ttft 0.5] [--deadline 2.0] [--virtual --step-cost-ms 10]
+        [--kill 0.5:0] [--min-slo-attainment 0.9] [--max-p99-ttft 10]
+        [--out results/bench_traffic.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.serving import FAMILY_DIMS
+
+
+def build_fleet(family: str, replicas: int, max_batch: int, max_len: int,
+                clock, step_cost_ms: float = 0.0):
+    from repro.core.cascade import CascadeConfig
+    from repro.models import registry
+    from repro.serve.elastic import ReplicaSet
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    arch = registry.FAMILY_SMOKE[family]
+    cfg = dataclasses.replace(registry.get_config(arch, smoke=True),
+                              **FAMILY_DIMS[family])
+    model = registry.build_model(cfg)
+    ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0), ccfg)
+    scfg = ServeConfig(max_batch=max_batch, max_len=max_len, batched=True,
+                       prefill_chunk=16)
+    engines = [ServeEngine(model, params, ccfg, scfg, clock=clock)
+               for _ in range(replicas)]
+    cost = (lambda i: step_cost_ms * 1e-3) if step_cost_ms > 0 else None
+    return cfg, ReplicaSet(engines, clock=clock, step_cost=cost)
+
+
+def bench_traffic(args) -> dict:
+    from repro.serve.router import SLORouter
+    from repro.serve.traffic import (MonotonicClock, TrafficConfig,
+                                     VirtualClock, poisson_trace)
+
+    clock = VirtualClock() if args.virtual else MonotonicClock()
+    cfg, rs = build_fleet(args.arch, args.replicas, args.max_batch,
+                          args.max_len, clock,
+                          step_cost_ms=(args.step_cost_ms if args.virtual
+                                        else 0.0))
+    if not args.virtual:
+        # wall mode: pay jit compile OUTSIDE the measured trace, or the
+        # first request's TTFT is compile time, not serving time
+        from repro.serve.engine import Request
+        rng = np.random.default_rng(123)
+        for i, eng in enumerate(rs.engines):
+            eng.submit(Request(uid=10_000 + i,
+                               prompt=rng.integers(0, cfg.vocab, 16)
+                               .astype(np.int32), max_new_tokens=2))
+        rs.drain(max_steps=500)
+        for eng in rs.engines:
+            eng._retired.clear()
+            eng.step_times.clear()
+
+    tcfg = TrafficConfig(rate_rps=args.rate, n_requests=args.n_requests,
+                         prompt_lens=((4, 16), (24, 40)),
+                         prompt_mix=(0.8, 0.2),
+                         output_lens=((2, 6), (8, 16)),
+                         output_mix=(0.7, 0.3),
+                         vocab=cfg.vocab, slo_ttft_s=args.slo_ttft,
+                         deadline_s=args.deadline, seed=args.seed)
+    kills = [(float(t), int(i)) for t, i in
+             (k.split(":") for k in args.kill)]
+    router = SLORouter(rs)
+    router.run_trace(poisson_trace(tcfg), kills=kills)
+    m = router.metrics()
+    return {
+        "arch": cfg.name,
+        "family": args.arch,
+        "shape": f"traffic_r{args.replicas}_b{args.max_batch}",
+        "mode": "traffic-virtual" if args.virtual else "traffic",
+        "status": "ok",
+        "replicas": args.replicas,
+        "max_batch": args.max_batch,
+        "rate_rps": args.rate,
+        "n_requests": args.n_requests,
+        "slo_ttft_s": args.slo_ttft,
+        "deadline_s": args.deadline,
+        "seed": args.seed,
+        "kills": [list(k) for k in kills],
+        "step_cost_ms": args.step_cost_ms if args.virtual else None,
+        "ttft_p50_s": round(m["ttft_p50_s"], 6),
+        "ttft_p99_s": round(m["ttft_p99_s"], 6),
+        "inter_token_p50_s": round(m["inter_token_p50_s"], 6),
+        "inter_token_p99_s": round(m["inter_token_p99_s"], 6),
+        "slo_attainment": round(m["slo_attainment"], 6),
+        "requests_finished": m["requests_finished"],
+        "requests_shed": m["requests_shed"],
+        "requests_rejected": m["requests_rejected"],
+        "replicas_alive": m["replicas_alive"],
+    }
+
+
+def main():
+    from repro.models import registry
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/bench_traffic.json")
+    ap.add_argument("--arch", default="transformer",
+                    choices=sorted(registry.FAMILY_SMOKE))
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--n-requests", type=int, default=48)
+    ap.add_argument("--slo-ttft", type=float, default=0.5,
+                    help="per-request TTFT SLO in seconds (0 = none)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="admission deadline in seconds (0 = never shed)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--virtual", action="store_true",
+                    help="deterministic VirtualClock run (same seed => "
+                         "identical percentiles) instead of wall clock")
+    ap.add_argument("--step-cost-ms", type=float, default=10.0,
+                    help="virtual seconds one replica step costs (--virtual)")
+    ap.add_argument("--kill", nargs="*", default=[], metavar="AT_S:REPLICA",
+                    help="fail-in-place events, e.g. 0.5:0 kills replica 0 "
+                         "half a second into the trace")
+    ap.add_argument("--min-slo-attainment", type=float, default=0.0,
+                    help="fail (exit 1) below this SLO attainment (0 = "
+                         "report only)")
+    ap.add_argument("--max-p99-ttft", type=float, default=0.0,
+                    help="fail (exit 1) if p99 TTFT exceeds this many "
+                         "seconds (0 = report only)")
+    args = ap.parse_args()
+
+    row = bench_traffic(args)
+    print(f"{args.arch:12s} r={args.replicas} rate={args.rate:g}/s  "
+          f"ttft p50/p99 {row['ttft_p50_s']*1e3:.1f}/{row['ttft_p99_s']*1e3:.1f} ms  "
+          f"inter-token p50/p99 {row['inter_token_p50_s']*1e3:.1f}/"
+          f"{row['inter_token_p99_s']*1e3:.1f} ms  "
+          f"SLO {row['slo_attainment']:.3f}  "
+          f"fin/shed/rej {row['requests_finished']}/{row['requests_shed']}/"
+          f"{row['requests_rejected']}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump([row], f, indent=1)
+    print(f"wrote 1 row -> {args.out}")
+
+    failures = []
+    if args.min_slo_attainment > 0 and (row["slo_attainment"]
+                                        < args.min_slo_attainment):
+        failures.append(f"SLO attainment {row['slo_attainment']:.3f} "
+                        f"< {args.min_slo_attainment:.3f}")
+    if args.max_p99_ttft > 0 and row["ttft_p99_s"] > args.max_p99_ttft:
+        failures.append(f"p99 TTFT {row['ttft_p99_s']:.3f}s "
+                        f"> {args.max_p99_ttft:.3f}s")
+    if failures:
+        print("TRAFFIC SLO GATE FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

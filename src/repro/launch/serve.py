@@ -67,6 +67,25 @@ def main():
     ap.add_argument("--verify-hlo", action="store_true",
                     help="print the decode step's partial-sum all-reduce "
                          "count; exit 1 if a cascade-policy step has any")
+    ap.add_argument("--traffic", action="store_true",
+                    help="live-traffic demo: route a seeded open-loop "
+                         "Poisson trace (--rate, --requests arrivals) over "
+                         "--replicas engine replicas via the SLO-aware "
+                         "router, and print per-request TTFT/inter-token "
+                         "percentiles + SLO attainment")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="engine replicas under --traffic")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (requests/s) under --traffic")
+    ap.add_argument("--slo-ttft", type=float, default=0.5,
+                    help="per-request TTFT SLO seconds under --traffic "
+                         "(0 = none)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="admission deadline seconds under --traffic "
+                         "(0 = never shed)")
+    ap.add_argument("--kill-at", type=float, default=None, metavar="T",
+                    help="with --traffic: fail replica 0 in place T seconds "
+                         "into the trace (its streams re-route token-exact)")
     args = ap.parse_args()
 
     from repro.launch import mesh as meshlib
@@ -90,6 +109,45 @@ def main():
                        temperature=args.temperature, top_k=args.top_k,
                        draft_len=args.draft_len, ngram_max=args.ngram_max,
                        tp_policy=args.tp_policy, fused=args.fused)
+
+    if args.traffic:
+        if mesh is not None or args.verify_hlo:
+            print("--traffic is a replica-fleet demo; run it without "
+                  "--mesh/--verify-hlo")
+            raise SystemExit(2)
+        from repro.serve.elastic import ReplicaSet
+        from repro.serve.router import SLORouter
+        from repro.serve.traffic import TrafficConfig, poisson_trace
+        engines = [ServeEngine(model, params, ccfg, scfg)
+                   for _ in range(args.replicas)]
+        rs = ReplicaSet(engines)
+        router = SLORouter(rs)
+        trace = poisson_trace(TrafficConfig(
+            rate_rps=args.rate, n_requests=args.requests,
+            prompt_lens=((max(1, args.prompt_len // 2), args.prompt_len),),
+            output_lens=((max(1, args.max_new // 2), args.max_new),),
+            vocab=cfg.vocab, slo_ttft_s=args.slo_ttft,
+            deadline_s=args.deadline))
+        kills = [(args.kill_at, 0)] if args.kill_at is not None else []
+        t0 = time.time()
+        recs = router.run_trace(trace, kills=kills)
+        dt = time.time() - t0
+        m = router.metrics()
+        print(f"traffic: {m['requests_offered']} arrivals at "
+              f"{args.rate:g} req/s over {args.replicas} replicas "
+              f"({m['replicas_alive']} alive after "
+              f"{len(kills)} kill(s)) in {dt:.2f}s")
+        print(f"  ttft p50/p99 {m['ttft_p50_s']*1e3:.1f}/"
+              f"{m['ttft_p99_s']*1e3:.1f} ms, inter-token p50/p99 "
+              f"{m['inter_token_p50_s']*1e3:.1f}/"
+              f"{m['inter_token_p99_s']*1e3:.1f} ms")
+        print(f"  SLO attainment {m['slo_attainment']:.3f} "
+              f"(finished {m['requests_finished']}, shed "
+              f"{m['requests_shed']}, rejected {m['requests_rejected']})")
+        for r in recs[:3]:
+            print(f"  req {r.uid}: {r.tokens_out}")
+        return
+
     eng = ServeEngine(model, params, ccfg, scfg, mesh=mesh)
 
     # never let "nothing was checked" look like "the invariant holds"

@@ -31,9 +31,23 @@ the replica-set controller used by the serving example:
   survivor's continuation is differently-realized but
   distribution-identical. Only greedy streams are token-exact across a
   failover,
-* **straggler mitigation**: requests on a replica whose p99 step latency
-  exceeds ``straggler_factor`` x the fleet median are eligible for
-  speculative re-dispatch to the fastest healthy replica.
+* **straggler mitigation**: a replica whose per-step EWMA exceeds
+  ``straggler_factor`` x the median of the OTHER healthy replicas is
+  **demoted** — its queue is re-dispatched to faster replicas and
+  least-loaded ``submit`` skips it — until its EWMA recovers below the
+  factor (it keeps stepping its resident work the whole time, so nothing
+  is lost). The comparison is deliberately median-of-OTHERS: with two
+  replicas the fleet-median (midpoint) form can never satisfy
+  ``ewma > factor * median`` for factor >= 1, so the original fleet-median
+  check silently never fired on the smallest real deployment.
+
+**Timing** is read from an injected :class:`repro.serve.traffic.Clock`
+(defaulting to the first engine's clock): under ``MonotonicClock`` the
+EWMAs measure wall time; under :class:`~repro.serve.traffic.VirtualClock`
+a ``step_cost(i) -> seconds`` hook supplies each replica's virtual step
+cost, advanced BEFORE the engine steps so committed tokens carry
+end-of-step timestamps and the EWMA equals the configured cost exactly —
+deterministic straggler/latency simulation for tests.
 
 **Shard-awareness**: replicas may run on their own device meshes — a
 ``ServeEngine(..., mesh=...)`` next to unsharded engines, or engines on
@@ -48,7 +62,7 @@ single-device case). Killing a sharded replica onto an unsharded survivor
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -81,45 +95,79 @@ def rebuild_request(req: Request) -> Request:
         return req
     clone = Request(uid=req.uid,
                     prompt=np.concatenate([req.prompt, np.asarray(new, np.int32)]),
-                    max_new_tokens=req.max_new_tokens)
+                    max_new_tokens=req.max_new_tokens,
+                    slo_ttft_s=req.slo_ttft_s,
+                    deadline_s=req.deadline_s)
     clone.tokens_out = list(req.tokens_out)
     clone.prompt_carried = len(clone.tokens_out)
+    # latency telemetry spans replicas: the re-routed stream keeps its
+    # original arrival and already-committed token timestamps, so its
+    # TTFT/inter-token record describes what the CLIENT saw, not what the
+    # survivor did (engine.submit only stamps created_at when it is 0.0)
+    clone.created_at = req.created_at
+    clone.first_token_at = req.first_token_at
+    clone.token_times = list(req.token_times)
     return clone
 
 
 @dataclasses.dataclass
 class ReplicaHealth:
     alive: bool = True
+    demoted: bool = False        # straggling: keeps stepping, no new work
     ewma_ms: float = 0.0
     steps: int = 0
 
 
 class ReplicaSet:
-    def __init__(self, engines: List[ServeEngine], straggler_factor: float = 3.0):
+    def __init__(self, engines: List[ServeEngine], straggler_factor: float = 3.0,
+                 clock=None,
+                 step_cost: Optional[Callable[[int], float]] = None):
         self.engines = engines
         self.health = [ReplicaHealth() for _ in engines]
         self.straggler_factor = straggler_factor
+        #: all replica timing reads this clock (default: the engines' own)
+        self.clock = clock if clock is not None else engines[0].clock
+        #: virtual-time hook: seconds one step of replica i costs. When set,
+        #: the clock is advanced by that cost BEFORE ``eng.step()`` so the
+        #: tokens committed inside the step are stamped with the step's END
+        #: time, and the EWMA equals the configured cost exactly.
+        self.step_cost = step_cost
         self.requeued: list = []   # clones created by failover (for tracking)
         self._rr = 0
 
     # ------------------------------------------------------------ dispatch
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> int:
         alive = [i for i, h in enumerate(self.health) if h.alive]
         assert alive, "no healthy replicas"
-        # least-loaded among healthy (queued + resident + mid-prefill)
-        i = min(alive, key=lambda j: self.engines[j].load())
+        # least-loaded among healthy non-stragglers (queued + resident +
+        # mid-prefill); if EVERY survivor is demoted, fall back to all alive
+        # rather than dropping the request on the floor
+        pool = [i for i in alive if not self.health[i].demoted] or alive
+        i = min(pool, key=lambda j: self.engines[j].load())
         self.engines[i].submit(req)
+        return i
 
     def step(self) -> int:
         produced = 0
         for i, (eng, h) in enumerate(zip(self.engines, self.health)):
             if not h.alive:
                 continue
-            import time
-            t0 = time.monotonic()
-            produced += eng.step()
-            dt = (time.monotonic() - t0) * 1e3
-            h.ewma_ms = dt if h.steps == 0 else 0.9 * h.ewma_ms + 0.1 * dt
+            if self.step_cost is not None:
+                # virtual-time path: an idle replica takes no step and pays
+                # no cost (its EWMA freezes; a demoted straggler recovers by
+                # stepping its RESIDENT work at the improved cost)
+                if not eng.busy():
+                    continue
+                dt_ms = float(self.step_cost(i)) * 1e3
+                advance = getattr(self.clock, "advance", None)
+                if advance is not None:
+                    advance(dt_ms * 1e-3)    # pay BEFORE stepping: commits
+                produced += eng.step()       # carry end-of-step timestamps
+            else:
+                t0 = self.clock.now()
+                produced += eng.step()
+                dt_ms = (self.clock.now() - t0) * 1e3
+            h.ewma_ms = dt_ms if h.steps == 0 else 0.9 * h.ewma_ms + 0.1 * dt_ms
             h.steps += 1
         self._mitigate_stragglers()
         return produced
@@ -148,16 +196,37 @@ class ReplicaSet:
         eng.queue.clear()
 
     def _mitigate_stragglers(self):
-        alive = [h for h in self.health if h.alive and h.steps > 4]
-        if len(alive) < 2:
-            return
-        med = np.median([h.ewma_ms for h in alive])
+        """Demote stragglers / recover demoted replicas.
+
+        Each candidate's EWMA is compared against the median of the OTHER
+        alive, non-demoted, warmed-up replicas (NOT the fleet median: with
+        2 replicas the fleet median is the midpoint, so
+        ``ewma > factor * median`` reduces to ``e > factor*(1+e)/2`` —
+        unsatisfiable for factor >= 1 — and demotion would never fire on
+        the smallest real deployment). Demotion moves the straggler's
+        queued-but-unadmitted work to faster replicas and flips
+        ``demoted`` so ``submit`` skips it; resident work keeps stepping.
+        Recovery flips it back once the EWMA is at or below the factor."""
         for i, h in enumerate(self.health):
-            if h.alive and h.steps > 4 and h.ewma_ms > self.straggler_factor * max(med, 1e-6):
-                # demote: stop admitting; current work finishes, queue drains
+            if not (h.alive and h.steps > 4):
+                continue
+            others = [o.ewma_ms for j, o in enumerate(self.health)
+                      if j != i and o.alive and not o.demoted and o.steps > 4]
+            if not others:
+                # nothing to compare against — and never demote the only
+                # dispatch target
+                h.demoted = False
+                continue
+            bar = self.straggler_factor * max(float(np.median(others)), 1e-6)
+            if not h.demoted and h.ewma_ms > bar:
+                h.demoted = True
+                # stop admitting; queued work re-routes to faster replicas,
+                # resident work finishes in place
                 for req in list(self.engines[i].queue):
                     self.submit(req)
                 self.engines[i].queue.clear()
+            elif h.demoted and h.ewma_ms <= bar:
+                h.demoted = False
 
     def drain(self, max_steps: int = 100_000):
         for _ in range(max_steps):

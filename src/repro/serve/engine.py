@@ -92,7 +92,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 import warnings
 from collections import deque
 from typing import Any, Callable, List, Optional
@@ -105,6 +104,7 @@ from repro.core import crest
 from repro.core.cascade import CascadeConfig
 from repro.distributed import sharding as shd
 from repro.serve.spec import ngram_propose
+from repro.serve.traffic import MonotonicClock
 
 #: methods a model must expose for the batched (stacked-cache) fast path
 #: (``stack_caches``/``cache_at`` are companion utilities on the model, but
@@ -226,7 +226,8 @@ class Request:
     uid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 32
-    created_at: float = 0.0
+    created_at: float = 0.0       # arrival: pre-stamped by an open-loop
+                                  # driver, else set at first submit()
     admitted_at: float = 0.0      # when prefill started (admission wait ends)
     first_token_at: float = 0.0
     finished_at: float = 0.0
@@ -234,6 +235,19 @@ class Request:
     done: bool = False
     prompt_carried: int = 0       # leading tokens_out entries already baked
                                   # into ``prompt`` by a failover rebuild
+    # --- per-request latency telemetry (the engine's injected clock) ---
+    token_times: list = dataclasses.field(default_factory=list)
+    #: token_times[i] is the clock reading when tokens_out[i] was COMMITTED
+    #: (post-verification under speculation — a spec step commits its whole
+    #: accepted run at one instant, which is the honest burst semantics).
+    #: TTFT = first_token_at - created_at; inter-token latencies are the
+    #: successive differences of token_times. Failover carries both lists,
+    #: so a re-routed stream's record spans replicas seamlessly.
+    # --- per-request SLOs (stamped by the traffic generator; 0 = none) ---
+    slo_ttft_s: float = 0.0       # TTFT target this request is judged by
+    deadline_s: float = 0.0       # admission deadline: the router sheds the
+                                  # request if not dispatched within this
+                                  # many seconds of arrival
 
 
 @dataclasses.dataclass(frozen=True)
@@ -287,12 +301,17 @@ class _Staging:
 
 class ServeEngine:
     def __init__(self, model, params, ccfg: CascadeConfig, scfg: ServeConfig,
-                 mesh=None):
+                 mesh=None, clock=None):
         self.model = model
         self.params = params
         self.ccfg = ccfg
         self.scfg = scfg
         self.mesh = mesh
+        # every serving-path latency number (request timestamps, admission
+        # waits, step times) reads THIS clock — wall time by default, a
+        # shared VirtualClock in deterministic traffic tests (the harness
+        # advances it; the engine only reads it)
+        self.clock = clock if clock is not None else MonotonicClock()
         self.tp_policy = scfg.tp_policy
         # the cascade policy installs the activation-broadcast discipline
         # (constrain_* hooks in model code); megatron is the measured GSPMD
@@ -547,7 +566,12 @@ class ServeEngine:
 
     # ------------------------------------------------------------ admission
     def submit(self, req: Request):
-        req.created_at = time.monotonic()
+        # an open-loop driver (or a failover rebuild) pre-stamps the arrival
+        # time; only a fresh direct submit takes "now" — re-stamping would
+        # erase queueing delay already accrued (on a dead replica, or in a
+        # router queue), which is exactly the delay TTFT must charge
+        if req.created_at == 0.0:
+            req.created_at = self.clock.now()
         self.queue.append(req)
 
     def _pop_admittable(self) -> Optional[Request]:
@@ -562,7 +586,7 @@ class ServeEngine:
                                         or len(req.prompt) < self.scfg.max_len):
                 return req
             req.done = True
-            req.finished_at = time.monotonic()
+            req.finished_at = self.clock.now()
             self._rejected += 1
             self._retired.append(req)
         return None
@@ -586,7 +610,7 @@ class ServeEngine:
                 req = self._pop_admittable()
                 if req is None:
                     return
-                req.admitted_at = time.monotonic()
+                req.admitted_at = self.clock.now()
                 self._admission_waits.append(req.admitted_at - req.created_at)
                 sub = self.model.init_cache(1, self._cache_len,
                                             dtype=self.ccfg.resolved_kv_dtype)
@@ -608,8 +632,7 @@ class ServeEngine:
             if st.consumed < len(prompt):
                 return                      # budget exhausted mid-prompt
             nxt = self._pick(logits[0, -1])
-            st.req.tokens_out.append(nxt)
-            st.req.first_token_at = time.monotonic()
+            self._commit_token(st.req, nxt)
             self.cache = self._write_fn(self.cache, st.cache, jnp.int32(st.slot))
             self.slots[st.slot] = st.req
             if self.spec:
@@ -628,14 +651,13 @@ class ServeEngine:
                 req = self._pop_admittable()
                 if req is None:
                     return
-                req.admitted_at = time.monotonic()
+                req.admitted_at = self.clock.now()
                 self._admission_waits.append(req.admitted_at - req.created_at)
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 logits, cache = self.model.prefill(
                     self.params, {"tokens": toks}, self.ccfg, max_len=self.scfg.max_len)
                 nxt = self._pick(logits[0, -1])
-                req.tokens_out.append(nxt)
-                req.first_token_at = time.monotonic()
+                self._commit_token(req, nxt)
                 self.slots[i] = req
                 self.caches[i] = cache
                 # the prefill-generated token may already end the stream
@@ -667,6 +689,17 @@ class ServeEngine:
             return int(jnp.argmax(row))
         return int(self._pick_fn(jnp.asarray(row), self._next_sample_key()))
 
+    def _commit_token(self, req: Request, tok: int):
+        """Append a committed token WITH its telemetry: the clock reading at
+        commit time and — on the stream's first token — ``first_token_at``.
+        A failover clone arrives with carried tokens/timestamps, so the
+        first-token stamp only ever fires once per client-visible stream
+        (the dead replica's TTFT is the stream's TTFT)."""
+        req.tokens_out.append(tok)
+        req.token_times.append(self.clock.now())
+        if req.first_token_at == 0.0:
+            req.first_token_at = req.token_times[-1]
+
     def _retire_if_done(self, req: Request, i: int, nxt: int):
         # cache usage: prompt + tokens emitted since (carried ones are
         # already inside the prompt — failover clones)
@@ -678,7 +711,7 @@ class ServeEngine:
                 # wrap and recurrent state is O(1))
                 or (not self.ctx_unbounded and used >= self.scfg.max_len)):
             req.done = True
-            req.finished_at = time.monotonic()
+            req.finished_at = self.clock.now()
             self._retired.append(req)
             self.slots[i] = None
             if not self.batched:
@@ -704,7 +737,7 @@ class ServeEngine:
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
-            req.tokens_out.append(tok)
+            self._commit_token(req, tok)
             produced += 1
             self._retire_if_done(req, i, tok)
         return produced
@@ -772,7 +805,7 @@ class ServeEngine:
             delivered = 0
             ctx = self._spec_ctx[i]
             for tok in seq:
-                req.tokens_out.append(tok)
+                self._commit_token(req, tok)
                 ctx.append(tok)
                 delivered += 1
                 self._retire_if_done(req, i, tok)
@@ -797,7 +830,7 @@ class ServeEngine:
             tok = jnp.asarray([[req.tokens_out[-1]]], jnp.int32)
             logits, self.caches[i] = self._decode_fn(self.params, tok, self.caches[i])
             nxt = self._pick(logits[0, -1] if logits.ndim == 3 else logits[0, -1, 0])
-            req.tokens_out.append(nxt)
+            self._commit_token(req, nxt)
             produced += 1
             self._retire_if_done(req, i, nxt)
         return produced
@@ -832,14 +865,14 @@ class ServeEngine:
             active = self._active()
             if not active:
                 return 0
-            t0 = time.monotonic()
+            t0 = self.clock.now()
             self._steps += 1
             if self.scfg.crest_enabled and self._steps % self.scfg.crest_every == 0:
                 self._crest_probe()
             produced = (self._decode_spec(active) if self.spec
                         else self._decode_batched(active) if self.batched
                         else self._decode_slotwise(active))
-            self.step_times.append(time.monotonic() - t0)
+            self.step_times.append(self.clock.now() - t0)
             self._decode_tokens += produced
             return produced
 
@@ -941,11 +974,36 @@ class ServeEngine:
         mode = f"{decode}-{'sampled' if self._sampled else 'greedy'}"
         return f"{mode}-fused" if self.fused else mode
 
+    @staticmethod
+    def latency_percentiles(requests) -> dict:
+        """Per-request latency percentiles over finished requests.
+
+        TTFT = first committed token minus ``created_at`` (the ARRIVAL
+        time under an open-loop driver — queueing delay is charged here).
+        Inter-token gaps are consecutive differences of each request's
+        ``token_times``; under speculative decode a whole accepted run
+        commits at one instant, so its intra-run gaps are honestly 0 and
+        the step-boundary gap carries the verify-pass cost. Requests that
+        never produced a token (rejected/shed) contribute nothing."""
+        ttfts = [r.first_token_at - r.created_at for r in requests
+                 if r.first_token_at > 0.0]
+        gaps = [b - a for r in requests
+                for a, b in zip(r.token_times, r.token_times[1:])]
+        tt = np.asarray(ttfts, np.float64)
+        gp = np.asarray(gaps, np.float64)
+        return {
+            "ttft_p50_s": float(np.percentile(tt, 50)) if tt.size else 0.0,
+            "ttft_p99_s": float(np.percentile(tt, 99)) if tt.size else 0.0,
+            "inter_token_p50_s": float(np.percentile(gp, 50)) if gp.size else 0.0,
+            "inter_token_p99_s": float(np.percentile(gp, 99)) if gp.size else 0.0,
+        }
+
     def metrics(self) -> dict:
         """Throughput/latency counters for the dashboard & benchmarks."""
         st = np.asarray(self.step_times, np.float64)
         total = float(st.sum()) if st.size else 0.0
         return {
+            **self.latency_percentiles(self._retired),
             "batched": self.batched,
             "effective_mode": self.effective_mode,
             "downgrades": list(self.downgrades),

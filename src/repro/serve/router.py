@@ -1,0 +1,182 @@
+"""SLO-aware routing of open-loop traffic over a ``ReplicaSet``.
+
+The missing layer between ``traffic.poisson_trace`` (arrivals the system
+does not control) and ``elastic.ReplicaSet`` (N engines with health
+state): a router that owns the admission queue and makes the three
+decisions a rack-scale front-end makes per request (paper Sections 2, 19;
+the serving-scaling survey in PAPERS.md frames tail-latency-under-load as
+the rack-scale metric):
+
+* **Dispatch** — least-loaded among alive, non-demoted replicas, and only
+  when the target has *headroom* (``engine.load() < max_batch``). The
+  headroom gate is what makes shedding possible at all: work the fleet
+  cannot start yet stays in the ROUTER's queue where the deadline check
+  can still reach it, instead of being buried in an engine queue that
+  admits strictly FIFO.
+* **Shedding** — a request whose admission deadline (``deadline_s`` after
+  arrival) passes before dispatch is dropped and counted in
+  ``requests_shed``; serving it would burn fleet capacity on a response
+  the client has already abandoned. Shed requests count as SLO misses —
+  honest accounting, no survivorship bias.
+* **Failover** — ``kill_replica`` mid-trace re-routes in-flight work via
+  ``elastic.rebuild_request`` with zero lost tokens; the rebuilt stream
+  keeps its original ``created_at`` and committed ``token_times``, so its
+  latency record describes what the client saw across both replicas.
+
+``run_trace`` is clock-dual: under a ``VirtualClock`` it fast-forwards
+idle gaps (``advance_to`` the next arrival) and replica step costs come
+from ``ReplicaSet.step_cost`` — two runs of the same seeded trace produce
+IDENTICAL per-request TTFT/inter-token records; under the wall
+``MonotonicClock`` it sleeps until the next arrival and latency is real.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.elastic import ReplicaSet
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.traffic import Arrival
+
+
+class SLORouter:
+    def __init__(self, replicas: ReplicaSet):
+        self.replicas = replicas
+        self.clock = replicas.clock
+        self.pending: deque = deque()       # arrived, not yet dispatched
+        self.shed: List[Request] = []       # deadline-expired, never served
+        self._offered = 0
+
+    # ------------------------------------------------------------ admission
+    def offer(self, req: Request):
+        """One arrival. ``created_at`` must already be stamped (open-loop:
+        the arrival instant, not the dispatch instant)."""
+        assert req.created_at > 0.0, "open-loop arrivals are pre-stamped"
+        self._offered += 1
+        self.pending.append(req)
+
+    def _dispatch(self) -> int:
+        """Shed the overdue, forward the rest while replicas have headroom."""
+        sent = 0
+        while self.pending:
+            now = self.clock.now()
+            req = self.pending[0]
+            if req.deadline_s > 0.0 and now - req.created_at > req.deadline_s:
+                self.pending.popleft()
+                req.done = True
+                req.finished_at = now
+                self.shed.append(req)
+                continue
+            i = self._target()
+            if i is None:                    # no headroom anywhere: requests
+                break                        # wait HERE, still sheddable
+            self.pending.popleft()
+            self.replicas.engines[i].submit(req)
+            sent += 1
+        return sent
+
+    def _target(self) -> Optional[int]:
+        """Least-loaded alive non-demoted replica with admission headroom
+        (falls back to demoted-but-alive if every survivor is demoted)."""
+        hs = self.replicas.health
+        alive = [i for i, h in enumerate(hs) if h.alive]
+        assert alive, "no healthy replicas"
+        pool = [i for i in alive if not hs[i].demoted] or alive
+        pool = [i for i in pool
+                if self.replicas.engines[i].load()
+                < self.replicas.engines[i].scfg.max_batch]
+        if not pool:
+            return None
+        return min(pool, key=lambda j: self.replicas.engines[j].load())
+
+    # ------------------------------------------------------------- the loop
+    def run_trace(self, trace: Sequence[Arrival],
+                  kills: Sequence[Tuple[float, int]] = (),
+                  max_steps: int = 100_000) -> List[Request]:
+        """Drive a full open-loop trace to completion; returns the final
+        per-request records (one per uid — see ``results``).
+
+        ``trace`` arrival times are trace-relative; they are re-based onto
+        this clock's epoch and each request's ``created_at`` is stamped
+        with its re-based ARRIVAL time, so queueing delay (router + engine)
+        is charged to TTFT. ``kills`` is a list of ``(at_s, replica)``
+        fail-in-place events, also trace-relative; killed replicas' work
+        re-routes to survivors token-exactly."""
+        t0 = self.clock.now()
+        arrivals = deque(sorted(trace, key=lambda a: a.at_s))
+        for a in arrivals:
+            assert a.request.created_at == 0.0, "trace already run"
+            a.request.created_at = t0 + a.at_s
+        kill_q = deque(sorted((t0 + t, i) for t, i in kills))
+        for _ in range(max_steps):
+            now = self.clock.now()
+            while kill_q and kill_q[0][0] <= now:
+                self.replicas.kill_replica(kill_q.popleft()[1])
+            while arrivals and t0 + arrivals[0].at_s <= now:
+                self.offer(arrivals.popleft().request)
+            self._dispatch()
+            busy = any(h.alive and e.busy() for e, h in
+                       zip(self.replicas.engines, self.replicas.health))
+            if busy or self.pending:
+                self.replicas.step()
+            elif arrivals or kill_q:
+                # fleet idle: jump/sleep to the next scheduled event
+                nxt = min(([t0 + arrivals[0].at_s] if arrivals else [])
+                          + ([kill_q[0][0]] if kill_q else []))
+                if hasattr(self.clock, "advance_to"):
+                    self.clock.advance_to(nxt)
+                else:
+                    time.sleep(max(0.0, nxt - self.clock.now()))
+            else:
+                return self.results()
+        raise RuntimeError(f"trace did not drain in {max_steps} steps")
+
+    # -------------------------------------------------------------- results
+    def results(self) -> List[Request]:
+        """Final record per uid, shed requests included.
+
+        A failover leaves TWO objects per re-routed stream (the aborted
+        original and the survivor's rebuilt clone, which carries the full
+        telemetry); the clone retires with more committed tokens, so
+        keeping the record with the longest ``tokens_out`` (ties: latest
+        ``finished_at``) yields exactly what the client observed."""
+        best: Dict[int, Request] = {}
+        everything = [r for e in self.replicas.engines for r in e._retired]
+        everything += self.shed
+        for r in everything:
+            cur = best.get(r.uid)
+            if (cur is None
+                    or (len(r.tokens_out), r.finished_at)
+                    > (len(cur.tokens_out), cur.finished_at)):
+                best[r.uid] = r
+        return sorted(best.values(), key=lambda r: r.uid)
+
+    def metrics(self) -> dict:
+        """Fleet-level per-request telemetry: latency percentiles over the
+        final records plus honest three-way accounting — ``finished``
+        (served to completion), ``shed`` (router deadline), ``rejected``
+        (engine admission: un-servable prompt). SLO attainment counts a
+        request as attained only if it produced a first token within its
+        ``slo_ttft_s``; shed and rejected SLO-stamped requests are MISSES,
+        not exclusions."""
+        recs = self.results()
+        shed_uids = {r.uid for r in self.shed}
+        rejected = sum(e.metrics()["requests_rejected"]
+                       for e in self.replicas.engines)
+        slo = [r for r in recs if r.slo_ttft_s > 0.0]
+        attained = [r for r in slo if r.first_token_at > 0.0
+                    and r.first_token_at - r.created_at <= r.slo_ttft_s]
+        return {
+            **ServeEngine.latency_percentiles(recs),
+            "requests_offered": self._offered,
+            "requests_finished": sum(1 for r in recs
+                                     if r.uid not in shed_uids
+                                     and r.first_token_at > 0.0),
+            "requests_shed": len(self.shed),
+            "requests_rejected": rejected,
+            "slo_attainment": (len(attained) / len(slo)) if slo else 1.0,
+            "replicas_alive": sum(h.alive for h in self.replicas.health),
+            "replicas_demoted": sum(h.demoted for h in self.replicas.health
+                                    if h.alive),
+        }

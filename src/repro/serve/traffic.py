@@ -1,0 +1,159 @@
+"""Open-loop traffic generation and the serving-path clock protocol.
+
+ZettaLith's premise is a rack serving inference for millions of users
+(paper Sections 2, 19): the metric that separates rack-scale serving from
+batch benchmarks is tail latency under an arrival process the system does
+NOT control. This module provides both halves of that measurement:
+
+* **Clocks** — every serving-path latency number (request timestamps,
+  admission waits, step times, replica EWMAs) reads an injected ``Clock``
+  instead of ``time.monotonic`` directly. ``MonotonicClock`` is the
+  wall-clock default; ``VirtualClock`` is a manually-advanced deterministic
+  clock, so a traffic test replays the SAME per-request TTFT/inter-token
+  records on every run (the harness — ``serve/router.py`` /
+  ``ReplicaSet.step_cost`` — advances it; the engines only read it).
+
+* **The generator** — ``poisson_trace`` builds a seeded OPEN-LOOP trace:
+  Poisson arrivals (i.i.d. exponential inter-arrival times at
+  ``rate_rps``), mixed prompt/output-length distributions (a weighted
+  mixture of uniform integer ranges — the short-interactive + long-batch
+  shape of real multi-tenant traffic), and per-request SLOs (a TTFT target
+  and an admission deadline after which the request should be shed rather
+  than served uselessly late). Open-loop means arrivals NEVER wait for the
+  system: each request's ``created_at`` is stamped with its arrival time
+  at generation, so queueing delay under overload shows up in TTFT instead
+  of silently throttling the offered load (closed-loop benchmarks measure
+  the generator, not the server).
+
+Same seed => identical trace (arrival times, prompts, lengths, SLOs) —
+pinned by ``tests/test_traffic.py`` property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Protocol, runtime_checkable
+
+import numpy as np
+
+
+# --------------------------------------------------------------------- clocks
+@runtime_checkable
+class Clock(Protocol):
+    """What the serving path needs from a time source: ``now()`` seconds.
+
+    Monotone non-decreasing; the zero point is arbitrary (only differences
+    are ever used)."""
+
+    def now(self) -> float: ...
+
+
+class MonotonicClock:
+    """Wall-clock default: ``time.monotonic`` behind the protocol."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class VirtualClock:
+    """Deterministic manual clock for traffic tests.
+
+    ``now()`` returns the last value set; the HARNESS advances it
+    (``advance``/``advance_to``) — e.g. ``ReplicaSet(step_cost=...)`` pays
+    a configured virtual cost per replica step, and the router fast-forwards
+    to the next arrival when the fleet idles. Engines only ever read it, so
+    two runs of the same seeded trace produce byte-identical latency
+    records."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        assert dt >= 0.0, f"virtual time cannot go backwards (dt={dt})"
+        self._t += dt
+        return self._t
+
+    def advance_to(self, t: float) -> float:
+        """Jump forward to ``t`` (no-op if ``t`` is in the past)."""
+        self._t = max(self._t, float(t))
+        return self._t
+
+
+# ------------------------------------------------------------------ generator
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """A seeded open-loop workload.
+
+    ``prompt_lens``/``output_lens`` are mixtures of inclusive ``(lo, hi)``
+    integer ranges with ``prompt_mix``/``output_mix`` component weights
+    (normalized; lengths are drawn uniformly inside the chosen component).
+    ``slo_ttft_s`` and ``deadline_s`` stamp every request; 0 disables the
+    respective SLO (no TTFT target / never shed)."""
+    rate_rps: float = 8.0             # Poisson arrival rate (requests/s)
+    n_requests: int = 32
+    prompt_lens: tuple = ((4, 16),)   # mixture of inclusive [lo, hi] ranges
+    prompt_mix: tuple = (1.0,)
+    output_lens: tuple = ((4, 16),)
+    output_mix: tuple = (1.0,)
+    vocab: int = 256
+    slo_ttft_s: float = 0.0           # per-request TTFT target (0 = none)
+    deadline_s: float = 0.0           # admission deadline: shed if not yet
+                                      # dispatched this long after arrival
+                                      # (0 = never shed)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Arrival:
+    """One trace entry: a request and the instant it arrives (seconds from
+    trace start, on whatever clock drives the run)."""
+    at_s: float
+    request: "object"                 # serve.engine.Request (deferred import)
+
+
+def _mixture_lengths(rng: np.random.Generator, n: int, ranges: tuple,
+                     mix: tuple) -> np.ndarray:
+    """n integer lengths from a weighted mixture of inclusive ranges."""
+    assert len(ranges) == len(mix) and len(ranges) >= 1, (ranges, mix)
+    for lo, hi in ranges:
+        assert 1 <= lo <= hi, f"bad length range ({lo}, {hi})"
+    w = np.asarray(mix, np.float64)
+    assert (w >= 0).all() and w.sum() > 0, f"bad mixture weights {mix}"
+    comp = rng.choice(len(ranges), size=n, p=w / w.sum())
+    lens = np.empty(n, np.int64)
+    for j, (lo, hi) in enumerate(ranges):
+        idx = comp == j
+        lens[idx] = rng.integers(lo, hi + 1, size=int(idx.sum()))
+    return lens
+
+
+def poisson_trace(cfg: TrafficConfig) -> List[Arrival]:
+    """Seeded open-loop trace: sorted arrivals with prompts, output budgets
+    and SLO stamps. ``at_s`` is relative to the trace start; the driver
+    (``SLORouter.run_trace``) re-bases it onto its clock's epoch and stamps
+    each request's ``created_at`` with the re-based ARRIVAL time (not the
+    later dispatch time), so queueing delay between arrival and dispatch is
+    charged to TTFT — the open-loop contract."""
+    from repro.serve.engine import Request   # deferred: engine imports clocks
+
+    rng = np.random.default_rng(cfg.seed)
+    assert cfg.rate_rps > 0 and cfg.n_requests > 0
+    gaps = rng.exponential(1.0 / cfg.rate_rps, cfg.n_requests)
+    at = np.cumsum(gaps)
+    plens = _mixture_lengths(rng, cfg.n_requests, cfg.prompt_lens,
+                             cfg.prompt_mix)
+    olens = _mixture_lengths(rng, cfg.n_requests, cfg.output_lens,
+                             cfg.output_mix)
+    trace = []
+    for i in range(cfg.n_requests):
+        req = Request(uid=i,
+                      prompt=rng.integers(0, cfg.vocab,
+                                          int(plens[i])).astype(np.int32),
+                      max_new_tokens=int(olens[i]),
+                      slo_ttft_s=cfg.slo_ttft_s,
+                      deadline_s=cfg.deadline_s)
+        trace.append(Arrival(at_s=float(at[i]), request=req))
+    return trace

@@ -1,0 +1,246 @@
+"""Direct ReplicaSet coverage: dispatch, demotion, drain, failover carry.
+
+The replica controller was previously exercised only through failover
+parity tests; these pin its own contracts — least-loaded submit, the
+straggler DEMOTION fix (the old fleet-median check could never fire with
+2 replicas, and a drained straggler immediately won the next least-loaded
+submit), EWMA recovery, drain termination with dead replicas, and
+``requeued``/telemetry bookkeeping across multiple kills — all under the
+injected VirtualClock + ``step_cost`` so every number is deterministic.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeConfig
+from repro.models import registry
+from repro.serve.elastic import ReplicaSet, rebuild_request
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.traffic import VirtualClock
+
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+CCFG = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg, model = registry.load("codeqwen1.5-7b", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    return cfg, model, params
+
+
+def _fleet(tiny_model, n=2, max_batch=2, step_cost=None, clock=None):
+    cfg, model, params = tiny_model
+    clk = clock if clock is not None else VirtualClock()
+    scfg = ServeConfig(max_batch=max_batch, max_len=64, batched=True,
+                       prefill_chunk=8)
+    rs = ReplicaSet([ServeEngine(model, params, CCFG, scfg, clock=clk)
+                     for _ in range(n)],
+                    clock=clk, step_cost=step_cost)
+    return cfg, rs
+
+
+def _reqs(cfg, n, max_new=4, seed=0, start_uid=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=start_uid + i,
+                    prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def test_submit_least_loaded_invariant(tiny_model):
+    """Every submit targets a replica whose pre-submit load was minimal
+    among eligible replicas — checked under a mixed load pattern."""
+    cfg, rs = _fleet(tiny_model, n=3, step_cost=lambda i: 0.01)
+    for r in _reqs(cfg, 9):
+        loads = [e.load() for e in rs.engines]
+        i = rs.submit(r)
+        assert loads[i] == min(loads), (i, loads)
+        if r.uid % 3 == 2:          # interleave steps: loads diverge
+            rs.step()
+    rs.drain(max_steps=500)
+    # the work actually spread: no replica served everything
+    served = [len(e._retired) for e in rs.engines]
+    assert sum(served) == 9 and max(served) < 9, served
+
+
+def test_replica_ewma_equals_virtual_step_cost(tiny_model):
+    """Under ``step_cost`` the replica EWMA — the demotion signal — equals
+    the configured cost exactly (the clock is advanced by exactly that
+    much around each step), deterministically."""
+    cfg, rs = _fleet(tiny_model, n=2, step_cost=lambda i: 0.02 * (i + 1))
+    for r in _reqs(cfg, 4):
+        rs.submit(r)
+    rs.drain(max_steps=200)
+    for i, h in enumerate(rs.health):
+        assert h.steps > 0
+        assert h.ewma_ms == pytest.approx(20.0 * (i + 1))
+
+
+def test_straggler_p99_reads_step_times(tiny_model):
+    """``straggler_p99`` is the 99th percentile of the engine's recorded
+    step times — positive and consistent under the wall clock."""
+    cfg, model, params = tiny_model
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=2, max_len=64, batched=True,
+                                  prefill_chunk=8))
+    for r in _reqs(cfg, 2):
+        eng.submit(r)
+    eng.run_until_drained(200)
+    assert eng.step_times
+    assert eng.straggler_p99() > 0.0
+    assert eng.straggler_p99() == pytest.approx(
+        float(np.percentile(np.asarray(eng.step_times), 99)))
+
+
+# ---------------------------------------------------------------------------
+# straggler demotion (the satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_slow_replica_demoted_and_stops_receiving(tiny_model):
+    """Regression for the fleet-median bug: with 2 replicas the old check
+    (ewma > factor * median-of-all) was unsatisfiable, so a straggler kept
+    winning least-loaded submits with its drained queue. Now: the slow
+    replica demotes and NEW work all lands on the fast one."""
+    cfg, rs = _fleet(tiny_model, n=2, max_batch=4,
+                     step_cost=lambda i: 1.0 if i == 0 else 0.01)
+    # warm both EWMAs past the steps>4 guard with resident work
+    for r in _reqs(cfg, 2, max_new=64):
+        rs.submit(r)
+    for _ in range(8):
+        rs.step()
+    assert rs.health[0].demoted and not rs.health[1].demoted
+    # demoted replica receives nothing new, even while loaded less
+    sinks = {rs.submit(r) for r in _reqs(cfg, 4, start_uid=100)}
+    assert sinks == {1}
+
+
+def test_demotion_reroutes_queued_work(tiny_model):
+    """Demotion moves the straggler's queued-but-unadmitted requests to
+    faster replicas; resident work stays and finishes in place."""
+    cfg, rs = _fleet(tiny_model, n=2, max_batch=1,
+                     step_cost=lambda i: 1.0 if i == 0 else 0.01)
+    # saturate both replicas, then overflow replica 0's queue
+    for r in _reqs(cfg, 2, max_new=64):
+        rs.submit(r)
+    extra = _reqs(cfg, 1, start_uid=50)[0]
+    rs.engines[0].submit(extra)
+    assert extra in rs.engines[0].queue
+    for _ in range(8):
+        rs.step()
+    assert rs.health[0].demoted
+    assert extra not in rs.engines[0].queue      # re-routed on demotion
+    assert extra in rs.engines[1].queue
+
+
+def test_demoted_replica_recovers(tiny_model):
+    """EWMA back under the bar (resident work stepping at the improved
+    cost) flips ``demoted`` off and the replica is dispatchable again."""
+    cost = {"slow": True}
+    cfg, rs = _fleet(tiny_model, n=2, max_batch=4,
+                     step_cost=lambda i: (1.0 if cost["slow"] else 0.01)
+                     if i == 0 else 0.01)
+    for r in _reqs(cfg, 2, max_new=200):
+        rs.submit(r)
+    for _ in range(8):
+        rs.step()
+    assert rs.health[0].demoted
+    cost["slow"] = False                          # straggler heals
+    for _ in range(80):
+        rs.step()
+        if not rs.health[0].demoted:
+            break
+    assert not rs.health[0].demoted
+    rs.drain(max_steps=1000)
+
+
+def test_never_demote_last_dispatch_target(tiny_model):
+    """With one replica alive there is nothing to compare against — it
+    must stay dispatchable no matter how slow it is."""
+    cfg, rs = _fleet(tiny_model, n=2, step_cost=lambda i: 1.0)
+    for r in _reqs(cfg, 2, max_new=16):
+        rs.submit(r)
+    rs.kill_replica(1)
+    for _ in range(8):
+        rs.step()
+    assert rs.health[0].alive and not rs.health[0].demoted
+    rs.drain(max_steps=500)
+    assert sum(len(e._retired) for e in rs.engines) == 2
+
+
+# ---------------------------------------------------------------------------
+# drain + multi-kill bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_drain_terminates_with_dead_replicas(tiny_model):
+    """A dead replica's busy() state must not wedge drain."""
+    cfg, rs = _fleet(tiny_model, n=3, step_cost=lambda i: 0.01)
+    for r in _reqs(cfg, 6):
+        rs.submit(r)
+    rs.step()
+    rs.kill_replica(0)
+    rs.kill_replica(2)
+    rs.drain(max_steps=500)
+    assert all(not e.busy() or not h.alive
+               for e, h in zip(rs.engines, rs.health))
+    # the sole survivor served every stream (re-routed or fresh)
+    assert {r.uid for r in rs.engines[1]._retired} == set(range(6))
+
+
+def test_requeued_bookkeeping_after_multi_kill(tiny_model):
+    """Every mid-decode stream killed (possibly twice) appears in
+    ``requeued`` as a telemetry-carrying clone; prompt_carried stops
+    double-baking tokens across repeated failures."""
+    cfg, rs = _fleet(tiny_model, n=3, max_batch=4,
+                     step_cost=lambda i: 0.01)
+    reqs = _reqs(cfg, 6, max_new=32)
+    for r in reqs:
+        rs.submit(r)
+    for _ in range(3):
+        rs.step()
+    rs.kill_replica(0)
+    for _ in range(2):
+        rs.step()
+    rs.kill_replica(1)
+    rs.drain(max_steps=2000)
+    assert rs.requeued, "kills mid-decode must create failover clones"
+    for clone in rs.requeued:
+        assert clone.prompt_carried == len(clone.prompt) - 8   # orig prompt 8
+        assert clone.created_at > 0.0                          # carried
+        assert len(clone.token_times) >= clone.prompt_carried
+    # zero lost tokens: the survivor finished every stream exactly once
+    final = {}
+    for e in rs.engines:
+        for r in e._retired:
+            cur = final.get(r.uid)
+            if cur is None or len(r.tokens_out) > len(cur.tokens_out):
+                final[r.uid] = r
+    assert set(final) == {r.uid for r in reqs}
+    for r in final.values():
+        assert len(r.tokens_out) == 32 and r.done
+
+
+def test_rebuild_request_carries_latency_telemetry(tiny_model):
+    """The failover clone's latency record spans replicas: arrival time,
+    first-token time and committed token timestamps all carry over, and
+    engine.submit must NOT re-stamp the carried created_at."""
+    cfg, rs = _fleet(tiny_model, n=2, step_cost=lambda i: 0.01)
+    req = _reqs(cfg, 1, max_new=16)[0]
+    req.created_at = 1.5                   # open-loop pre-stamped arrival
+    rs.submit(req)
+    for _ in range(4):
+        rs.step()
+    assert req.token_times and req.first_token_at > 0.0
+    clone = rebuild_request(req)
+    assert clone is not req
+    assert clone.created_at == 1.5
+    assert clone.first_token_at == req.first_token_at
+    assert clone.token_times == req.token_times
+    rs.engines[1].submit(clone)
+    assert clone.created_at == 1.5         # submit kept the carried stamp

@@ -593,3 +593,75 @@ def test_prefill_extend_matches_prefill(family_model):
     if fam == "transformer":
         np.testing.assert_array_equal(np.asarray(cache["layers"]["pos"]),
                                       np.asarray(cache_p["layers"]["pos"]))
+
+
+# ---------------------------------------------------------------------------
+# per-request latency telemetry (the injected clock)
+# ---------------------------------------------------------------------------
+
+def test_per_token_telemetry_and_latency_percentiles(tiny_model):
+    """Every committed token carries a clock stamp: token_times parallels
+    tokens_out, first_token_at is the first stamp, and metrics() exposes
+    TTFT / inter-token percentiles computed from retired requests."""
+    from repro.serve.traffic import VirtualClock
+    cfg, model, params = tiny_model
+    clk = VirtualClock(start=100.0)
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=2, max_len=64, batched=True),
+                      clock=clk)
+    reqs = _requests(cfg, [8, 8, 8], max_new=4)
+    for r in reqs:
+        eng.submit(r)
+        assert r.created_at == 100.0            # stamped on submit
+    while eng.busy():
+        clk.advance(0.5)                        # harness-advanced time
+        eng.step()
+    for r in reqs:
+        assert r.done
+        assert len(r.token_times) == len(r.tokens_out)
+        assert r.first_token_at == r.token_times[0] > r.created_at
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+    m = eng.metrics()
+    for k in ("ttft_p50_s", "ttft_p99_s",
+              "inter_token_p50_s", "inter_token_p99_s"):
+        assert m[k] > 0.0, k
+    assert m["ttft_p50_s"] <= m["ttft_p99_s"]
+    assert m["inter_token_p50_s"] <= m["inter_token_p99_s"]
+
+
+def test_spec_commit_burst_has_zero_intra_run_gaps(tiny_model):
+    """Speculative decode commits a whole accepted run at ONE instant:
+    intra-run inter-token gaps are honestly 0 (a client sees the burst),
+    and the telemetry must record that rather than fabricate spacing."""
+    from repro.serve.traffic import VirtualClock
+    cfg, model, params = tiny_model
+    clk = VirtualClock()
+    eng = ServeEngine(model, params, CCFG,
+                      ServeConfig(max_batch=1, max_len=128, batched=True,
+                                  draft_len=4),
+                      clock=clk)
+    rng = np.random.default_rng(0)
+    pat = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=np.tile(pat, 4), max_new_tokens=12))
+    while eng.busy():
+        clk.advance(1.0)
+        eng.step()
+    req = eng._retired[-1]
+    assert eng.spec and len(req.token_times) == len(req.tokens_out)
+    gaps = [b - a for a, b in zip(req.token_times, req.token_times[1:])]
+    assert any(g == 0.0 for g in gaps), "accepted runs commit at one instant"
+    assert all(g in (0.0, 1.0) for g in gaps)
+
+
+def test_rejected_requests_excluded_from_latency_stats(tiny_model):
+    """Rejected (never-served) requests have no first token; they must not
+    poison the TTFT percentiles but must count in requests_rejected."""
+    cfg, model, params = tiny_model
+    reqs, eng = _run(model, params, cfg, [0, 8],
+                     ServeConfig(max_batch=1, max_len=64, batched=True),
+                     max_new=3)
+    m = eng.metrics()
+    assert m["requests_rejected"] == 1
+    assert m["requests_finished"] == 1
+    assert reqs[0].first_token_at == 0.0 and reqs[0].token_times == []
+    assert m["ttft_p50_s"] > 0.0                # from the served request only

@@ -1,0 +1,183 @@
+"""SLO-aware router over live traffic: determinism, failover, shedding.
+
+The acceptance contracts of the live-traffic harness:
+
+* two runs of the same seeded trace under the VirtualClock produce
+  IDENTICAL per-request TTFT/inter-token records (latency is data, not
+  noise, in tests);
+* a mid-trace ``kill_replica`` drains with ZERO lost tokens and
+  token-exact re-routed streams (greedy decode is schedule-independent,
+  so the killed run must emit exactly the unkilled run's tokens);
+* admission-deadline shedding is honestly accounted: offered =
+  finished + shed + rejected, and shed SLO-stamped requests count as
+  attainment MISSES;
+* the headroom gate keeps engine queues bounded so waiting work stays in
+  the router where the deadline check can reach it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeConfig
+from repro.models import registry
+from repro.serve.elastic import ReplicaSet
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.router import SLORouter
+from repro.serve.traffic import TrafficConfig, VirtualClock, poisson_trace
+
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+CCFG = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg, model = registry.load("codeqwen1.5-7b", smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    return cfg, model, params
+
+
+def _run(tiny_model, tcfg, kills=(), replicas=2, max_batch=2,
+         step_cost=0.01, slow_replica=None):
+    cfg, model, params = tiny_model
+    clk = VirtualClock()
+    scfg = ServeConfig(max_batch=max_batch, max_len=64, batched=True,
+                       prefill_chunk=8)
+    engines = [ServeEngine(model, params, CCFG, scfg, clock=clk)
+               for _ in range(replicas)]
+    cost = (lambda i: step_cost * (100.0 if i == slow_replica else 1.0))
+    rs = ReplicaSet(engines, clock=clk, step_cost=cost)
+    router = SLORouter(rs)
+    recs = router.run_trace(poisson_trace(tcfg), kills=kills)
+    return recs, router
+
+
+def _records(recs):
+    return [(r.uid, r.created_at, r.first_token_at, tuple(r.token_times),
+             tuple(r.tokens_out)) for r in recs]
+
+
+TCFG = TrafficConfig(rate_rps=25.0, n_requests=16, vocab=512,
+                     prompt_lens=((4, 10),), output_lens=((8, 14),),
+                     slo_ttft_s=0.5, seed=11)
+
+
+def test_same_seed_identical_latency_records(tiny_model):
+    a, _ = _run(tiny_model, TCFG)
+    b, _ = _run(tiny_model, TCFG)
+    assert _records(a) == _records(b)
+
+
+def test_mid_trace_kill_zero_lost_tokens(tiny_model):
+    """The acceptance criterion: seeded open-loop run over 2 replicas,
+    kill one mid-trace — every stream drains token-exact with the
+    unkilled run (zero lost, zero duplicated, zero mutated tokens)."""
+    ref, _ = _run(tiny_model, TCFG)
+    out, router = _run(tiny_model, TCFG, kills=[(0.15, 0)])
+    assert sum(h.alive for h in router.replicas.health) == 1
+    assert router.replicas.requeued, "kill mid-decode must re-route work"
+    ref_toks = {r.uid: tuple(r.tokens_out) for r in ref}
+    out_toks = {r.uid: tuple(r.tokens_out) for r in out}
+    assert ref_toks == out_toks
+    m = router.metrics()
+    assert m["requests_finished"] == TCFG.n_requests
+    # re-routed streams kept their original arrival stamp: TTFT spans
+    # replicas, so no re-routed record can claim a NEGATIVE queueing delay
+    for r in out:
+        assert r.first_token_at > r.created_at > 0.0
+
+
+def test_failover_latency_record_spans_replicas(tiny_model):
+    """A re-routed stream's token_times must be monotone across the kill
+    boundary — early tokens stamped on the dead replica, later ones on
+    the survivor, one record."""
+    out, router = _run(tiny_model, TCFG, kills=[(0.15, 0)])
+    carried = {c.uid for c in router.replicas.requeued}
+    assert carried
+    for r in out:
+        if r.uid in carried:
+            assert len(r.token_times) == len(r.tokens_out)
+            assert all(b >= a for a, b in zip(r.token_times,
+                                              r.token_times[1:]))
+
+
+def test_deadline_shedding_honest_accounting(tiny_model):
+    """One replica + crushing load + tight deadline: some requests shed
+    from the ROUTER queue; offered = finished + shed + rejected and shed
+    SLO-stamped requests count as attainment misses."""
+    tcfg = TrafficConfig(rate_rps=200.0, n_requests=24, vocab=512,
+                         prompt_lens=((4, 10),), output_lens=((6, 10),),
+                         slo_ttft_s=0.05, deadline_s=0.10, seed=2)
+    recs, router = _run(tiny_model, tcfg, replicas=1, max_batch=2,
+                        step_cost=0.02)
+    m = router.metrics()
+    assert m["requests_shed"] > 0
+    assert (m["requests_offered"]
+            == m["requests_finished"] + m["requests_shed"]
+            + m["requests_rejected"])
+    assert m["slo_attainment"] <= 1.0 - m["requests_shed"] / tcfg.n_requests
+    # shed requests are in the final records, marked done, zero tokens
+    shed = [r for r in recs if not r.tokens_out]
+    assert len(shed) == m["requests_shed"]
+    assert all(r.done and r.first_token_at == 0.0 for r in shed)
+
+
+def test_no_shedding_without_deadline(tiny_model):
+    """deadline_s=0 disables shedding: the same crushing load just queues
+    (open loop: the delay lands in TTFT, nothing is dropped)."""
+    tcfg = TrafficConfig(rate_rps=200.0, n_requests=24, vocab=512,
+                         prompt_lens=((4, 10),), output_lens=((6, 10),),
+                         slo_ttft_s=0.05, deadline_s=0.0, seed=2)
+    recs, router = _run(tiny_model, tcfg, replicas=1, max_batch=2,
+                        step_cost=0.02)
+    m = router.metrics()
+    assert m["requests_shed"] == 0
+    assert m["requests_finished"] == tcfg.n_requests
+    # overload with no shedding: queueing delay shows up in tail TTFT
+    assert m["ttft_p99_s"] > m["ttft_p50_s"] > 0.0
+    assert m["slo_attainment"] < 1.0
+
+
+def test_headroom_gate_bounds_engine_queues(tiny_model):
+    """The router only forwards to a replica with load < max_batch, so an
+    engine's load never exceeds max_batch while the ROUTER holds the rest
+    (where deadlines can still shed them)."""
+    cfg, model, params = tiny_model
+    clk = VirtualClock()
+    scfg = ServeConfig(max_batch=2, max_len=64, batched=True,
+                       prefill_chunk=8)
+    engines = [ServeEngine(model, params, CCFG, scfg, clock=clk)
+               for _ in range(2)]
+    rs = ReplicaSet(engines, clock=clk, step_cost=lambda i: 0.02)
+    router = SLORouter(rs)
+    t0 = clk.now()
+    rng = np.random.default_rng(0)
+    for i in range(12):                     # burst: all arrive at once
+        router.offer(Request(uid=i,
+                             prompt=rng.integers(0, cfg.vocab, 8)
+                             .astype(np.int32),
+                             max_new_tokens=4, created_at=t0 + 1e-9))
+    for _ in range(400):
+        router._dispatch()
+        for e in engines:
+            assert e.load() <= scfg.max_batch
+        if not router.pending and not any(e.busy() for e in engines):
+            break
+        rs.step()
+    assert sum(len(e._retired) for e in engines) == 12
+
+
+def test_slow_replica_demoted_under_traffic(tiny_model):
+    """End-to-end: a 100x straggler demotes mid-trace and the router stops
+    routing NEW arrivals to it (resident work still finishes)."""
+    tcfg = TrafficConfig(rate_rps=25.0, n_requests=24, vocab=512,
+                         prompt_lens=((4, 10),), output_lens=((8, 12),),
+                         slo_ttft_s=0.5, seed=5)
+    recs, router = _run(tiny_model, tcfg, replicas=2, slow_replica=0)
+    assert router.replicas.health[0].demoted
+    assert router.metrics()["requests_finished"] == tcfg.n_requests
+    # the fast replica served the overwhelming majority
+    served = [len(e._retired) for e in router.replicas.engines]
+    assert served[1] > served[0]
