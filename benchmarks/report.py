@@ -93,6 +93,70 @@ def traffic_lines(rows):
     return lines
 
 
+def prefix_lines(serving, traffic):
+    """Markdown lines for the prefix-cache warm-vs-cold TTFT table ('' if
+    no paged/prefix rows anywhere). Two row sources, both schema-tolerant:
+
+    * ``prefix_probe`` rows from ``benchmarks/serving.py --paged`` — a
+      same-engine cold-then-warm prefill probe (report-only numbers);
+    * ``*-prefix`` traffic rows from ``benchmarks/traffic.py
+      --prefix-cache`` — warm/cold TTFT p50 split by arrival order under
+      the open-loop shared-system-prompt trace (the CI-gated numbers).
+
+    Rows missing any of the new keys (``prefix_hit_rate``,
+    ``ttft_warm_p50_s``, ...) render dashes, never KeyError."""
+    probes = [r for r in serving if r.get("shape") == "prefix_probe"]
+    trows = [r for r in traffic
+             if str(r.get("mode", "")).endswith("-prefix")
+             or "ttft_warm_p50_s" in r]
+    if not probes and not trows:
+        return []
+
+    def ms(r, k):
+        v = r.get(k)
+        return f"{v * 1e3:.1f}" if isinstance(v, (int, float)) else "—"
+
+    def ratio(r, warm_k, cold_k):
+        w, c = r.get(warm_k), r.get(cold_k)
+        if isinstance(w, (int, float)) and isinstance(c, (int, float)) and w > 0:
+            return f"{c / w:.2f}x"
+        return "—"
+
+    lines = [
+        "",
+        "## Prefix cache: warm vs cold TTFT (paged KV pool + radix tree)",
+        "",
+        "A warm request's shared prefix is already resident in the page "
+        "pool, so admission re-pins pages and prefills only the unique "
+        "suffix; a cold request pays full prefill. Probe rows are a "
+        "same-engine A/B (benchmarks/serving.py --paged); traffic rows "
+        "split the open-loop shared-system-prompt trace by arrival order "
+        "(benchmarks/traffic.py --prefix-cache — the CI-gated numbers).",
+        "",
+        "| source | family | shared prefix | cold ttft ms | warm ttft ms "
+        "| cold/warm | hit rate | pages | evictions |",
+        "|" + "---|" * 9,
+    ]
+    for r in sorted(probes, key=lambda x: str(x.get("family", "?"))):
+        lines.append(
+            f"| probe | {r.get('family', '?')} | {r.get('prefix_len', '—')} "
+            f"| {ms(r, 'ttft_cold_s')} | {ms(r, 'ttft_warm_s')} "
+            f"| {ratio(r, 'ttft_warm_s', 'ttft_cold_s')} "
+            f"| {r.get('prefix_hit_rate', '—')} "
+            f"| {r.get('pages_in_use', '—')} | {r.get('evictions', '—')} |")
+    for r in sorted(trows, key=lambda x: (str(x.get("family", "?")),
+                                          str(x.get("mode", "?")))):
+        clock = "virtual" if "virtual" in str(r.get("mode", "")) else "wall"
+        lines.append(
+            f"| traffic ({clock}) | {r.get('family', '?')} "
+            f"| {r.get('shared_prefix_len', '—')} "
+            f"| {ms(r, 'ttft_cold_p50_s')} | {ms(r, 'ttft_warm_p50_s')} "
+            f"| {ratio(r, 'ttft_warm_p50_s', 'ttft_cold_p50_s')} "
+            f"| {r.get('prefix_hit_rate', '—')} "
+            f"| {r.get('pages_in_use', '—')} | {r.get('evictions', '—')} |")
+    return lines
+
+
 def fused_lines(rows):
     """Markdown lines for the fused-FP4 measured-vs-bound table ('' if no
     fused rows). Tolerant of rows missing the bound fields: a fused row
@@ -176,8 +240,9 @@ def main():
         print("|" + "---|" * 13)
         by_key = {}
         for r in rows:
-            if r.get("mode") in ("fp4", "fused"):
-                continue  # rendered in their own table (fused_lines)
+            if r.get("mode") in ("fp4", "fused", "paged"):
+                continue  # rendered in their own tables (fused_lines /
+                          # prefix_lines)
             key = (r.get("family", r.get("arch", "?")), r.get("max_batch", "?"))
             # sampled spec rows (temperature > 0) render in their own
             # columns; greedy spec rows keep the legacy 'spec' slot
@@ -260,7 +325,11 @@ def main():
     for line in fused_lines(rows):
         print(line)
 
-    for line in traffic_lines(traffic_rows()):
+    trows = traffic_rows()
+    for line in traffic_lines(trows):
+        print(line)
+
+    for line in prefix_lines(rows, trows):
         print(line)
 
     # CASCADE invariant check: forward graphs with zero all-reduce bytes

@@ -54,6 +54,17 @@ batched throughput is below X times slot-wise for any covered arch/batch
 ``--min-accept Y`` gates spec rows at >= Y accepted draft tokens per
 (slot, step) (CI runs this at 1.0).
 
+* ``paged`` (``--paged``) — the page-pool + radix-prefix-cache engine
+  (PR 9): decode throughput rows against the dense batched baseline (the
+  block-table gather is the only difference, so the speedup column
+  isolates paged-read overhead), plus ONE report-only ``prefix_probe``
+  row per family measuring warm-vs-cold prefill TTFT: a cold request
+  pays full prefill for its shared prefix, a warm request with the SAME
+  prefix admits through resident pages and only prefills its unique
+  suffix. Fields (``ttft_cold_s``/``ttft_warm_s``/``prefix_hit_rate``)
+  are report-only here; the gated warm<cold check lives in
+  ``benchmarks/traffic.py`` where the open-loop trace drives it.
+
 * ``mesh`` (``--mesh DxM``, typically with ``--host-devices 8``) — the
   batched engine on a real ``NamedSharding`` mesh: params placed by
   ``--tp-policy`` (cascade column-parallel by default), stacked caches
@@ -170,7 +181,8 @@ def build_engine(family: str, mode: str, max_batch: int, draft_len: int = 4,
                        batched=(mode != "slotwise"), prefill_chunk=PROMPT_LEN,
                        draft_len=(draft_len if mode == "spec" else 0),
                        temperature=temperature, tp_policy=tp_policy,
-                       fused=(mode == "fused"))
+                       fused=(mode == "fused"),
+                       prefix_cache=(mode == "paged"))
     return cfg, ServeEngine(model, params, ccfg, scfg,
                             mesh=(mesh if mode == "mesh" else None))
 
@@ -200,6 +212,10 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
         # never report a silently-downgraded run as a kernel measurement
         assert eng.effective_mode.endswith("-fused"), (
             f"fused bench downgraded: {eng.effective_mode} "
+            f"({'; '.join(eng.downgrades)})")
+    if mode == "paged":
+        assert eng.effective_mode.endswith("-paged"), (
+            f"paged bench downgraded: {eng.effective_mode} "
             f"({'; '.join(eng.downgrades)})")
     eng.step_times.clear()                  # drop trace/compile steps from p50/p99
     best_dt, produced = float("inf"), 0
@@ -231,6 +247,9 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
         row["accepted_per_step"] = round(m["accepted_per_step"], 4)
     if mode in ("fp4", "fused"):
         row["weights"] = "fp4"
+    if mode == "paged":
+        row["page_size"] = m["page_size"]
+        row["pages_in_use"] = m["pages_in_use"]
     if mode == "fused":
         # measured decode throughput vs the weight-streaming bound: decoding
         # one token per slot must stream every live weight byte once, so the
@@ -255,6 +274,72 @@ def bench_mode(family: str, mode: str, max_batch: int, draft_len: int = 4,
         row["partial_sum_allreduces"] = ar["count"]
         row["partial_sum_allreduce_bytes"] = ar["bytes"]
     return row
+
+
+def probe_prefix_ttft(family: str, prefix_len: int = 64,
+                      suffix_len: int = 8) -> dict | None:
+    """Report-only warm-vs-cold prefill probe for the prefix cache.
+
+    Cold: a request whose shared prefix is NOT resident pays full prefill.
+    Warm: a request with the SAME prefix admits through the radix tree's
+    resident pages and only prefills its unique suffix. Both TTFTs are
+    wall-clocked over a jit-warm engine (a throwaway request compiles every
+    chunk shape first), best-of-``REPEATS`` with a FRESH shared prefix per
+    cold repeat (a repeated cold prompt would hit the tree and stop being
+    cold). Returns ``None`` for families the paged engine downgrades on
+    (ring/recurrent state has no page-gather read path)."""
+    import warnings
+
+    from repro.serve.engine import Request
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        cfg, eng = build_engine(family, "paged", max_batch=2,
+                                max_len=2 * (prefix_len + suffix_len + 8))
+    if not eng.paged:
+        return None
+    rng = np.random.default_rng(0)
+    uid = [0]
+
+    def ttft(prompt: np.ndarray) -> float:
+        uid[0] += 1
+        req = Request(uid=uid[0], prompt=prompt, max_new_tokens=2)
+        eng.submit(req)
+        t0 = time.perf_counter()
+        while not req.tokens_out:
+            eng.step()
+        dt = time.perf_counter() - t0
+        while eng.busy():
+            eng.step()
+        return dt
+
+    # jit warmup: same total length => every prefill chunk shape (full and
+    # ragged tail) plus the decode step compile here, off the measurement
+    ttft(rng.integers(0, cfg.vocab, prefix_len + suffix_len).astype(np.int32))
+    cold, warm = float("inf"), float("inf")
+    for _ in range(REPEATS):
+        shared = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+        sfx = [rng.integers(0, cfg.vocab, suffix_len).astype(np.int32)
+               for _ in range(2)]
+        cold = min(cold, ttft(np.concatenate([shared, sfx[0]])))
+        warm = min(warm, ttft(np.concatenate([shared, sfx[1]])))
+    m = eng.metrics()
+    return {
+        "arch": cfg.name,
+        "family": family,
+        "shape": "prefix_probe",
+        "mode": "paged",
+        "status": "ok",
+        "prefix_len": prefix_len,
+        "suffix_len": suffix_len,
+        "page_size": m["page_size"],
+        "ttft_cold_s": round(cold, 6),
+        "ttft_warm_s": round(warm, 6),
+        "warm_speedup": round(cold / max(warm, 1e-9), 2),
+        "prefix_hit_rate": round(m["prefix_hit_rate"], 4),
+        "pages_in_use": m["pages_in_use"],
+        "evictions": m["evictions"],
+    }
 
 
 def main():
@@ -295,6 +380,12 @@ def main():
                     help="bench ONLY the fused + fp4-baseline rows (no "
                          "slotwise/batched sweeps): the CI fused-decode leg "
                          "gates kernel dispatch, not batching speedups")
+    ap.add_argument("--paged", action="store_true",
+                    help="also bench the page-pool engine: paged decode "
+                         "throughput vs the dense batched baseline, plus a "
+                         "report-only warm-vs-cold prefix-cache TTFT probe "
+                         "per family (the gated warm<cold check lives in "
+                         "benchmarks/traffic.py)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="also bench the sharded engine on a (data, model) "
                          "host mesh, e.g. 4x2; cascade rows must show ZERO "
@@ -346,6 +437,7 @@ def main():
     mesh = meshlib.make_serving_mesh(args.mesh) if args.mesh else None
 
     rows, failures = [], []
+    paged_ok = {}         # family -> probe row (None = downgraded, skip)
     for family in args.archs:
         for b in args.batches:
             bat = None
@@ -379,6 +471,29 @@ def main():
                 if args.min_speedup > 0 and speedup < args.min_speedup:
                     failures.append(f"{family} b={b}: {speedup:.2f}x "
                                     f"< {args.min_speedup:.2f}x")
+            if args.paged and not args.mesh_only and not args.spec_only:
+                if family not in paged_ok:
+                    paged_ok[family] = probe_prefix_ttft(family)
+                    if paged_ok[family] is not None:
+                        pr = paged_ok[family]
+                        rows.append(pr)
+                        print(f"{'':12s}       prefix probe: cold "
+                              f"{pr['ttft_cold_s'] * 1e3:7.2f} ms  warm "
+                              f"{pr['ttft_warm_s'] * 1e3:7.2f} ms  "
+                              f"({pr['warm_speedup']:.2f}x, hit rate "
+                              f"{pr['prefix_hit_rate']:.2f})")
+                    else:
+                        print(f"{family:12s}       paged: downgraded "
+                              "(no page-gather read path), skipped")
+                if paged_ok[family] is not None:
+                    pg = bench_mode(family, "paged", b)
+                    if bat is not None:
+                        pg["speedup_vs_batched"] = round(
+                            pg["tokens_per_s"]
+                            / max(bat["tokens_per_s"], 1e-9), 2)
+                    rows.append(pg)
+                    print(f"{'':12s}       paged    {pg['tokens_per_s']:9.1f} "
+                          f"tok/s   pages {pg['pages_in_use']}")
             if args.spec and not args.mesh_only:
                 # sampled spec runs on the shrunken vocab (see module
                 # docstring); its baseline matches it exactly — same vocab,

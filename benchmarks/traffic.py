@@ -48,7 +48,8 @@ from benchmarks.serving import FAMILY_DIMS
 
 
 def build_fleet(family: str, replicas: int, max_batch: int, max_len: int,
-                clock, step_cost_ms: float = 0.0):
+                clock, step_cost_ms: float = 0.0, prefix_cache: bool = False,
+                page_size: int = 16, token_budget: int = 0):
     from repro.core.cascade import CascadeConfig
     from repro.models import registry
     from repro.serve.elastic import ReplicaSet
@@ -61,11 +62,36 @@ def build_fleet(family: str, replicas: int, max_batch: int, max_len: int,
     ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
     params = model.init_params(jax.random.PRNGKey(0), ccfg)
     scfg = ServeConfig(max_batch=max_batch, max_len=max_len, batched=True,
-                       prefill_chunk=16)
+                       prefill_chunk=16, prefix_cache=prefix_cache,
+                       page_size=page_size, token_budget=token_budget)
     engines = [ServeEngine(model, params, ccfg, scfg, clock=clock)
                for _ in range(replicas)]
     cost = (lambda i: step_cost_ms * 1e-3) if step_cost_ms > 0 else None
     return cfg, ReplicaSet(engines, clock=clock, step_cost=cost)
+
+
+def warm_cold_ttft(recs):
+    """Split per-request TTFT into cold (first arrival of each shared
+    prefix, plus every untagged prompt) and warm (later arrivals of an
+    already-seen prefix — the radix cache should have it resident).
+
+    Returns ``(warm_p50, cold_p50, n_warm, n_cold)``. The split is by
+    arrival order, which is deterministic under a ``VirtualClock``."""
+    seen = set()
+    warm, cold = [], []
+    for r in sorted(recs, key=lambda r: r.created_at):
+        if r.first_token_at <= 0.0:
+            continue
+        ttft = r.first_token_at - r.created_at
+        pid = getattr(r, "prefix_id", -1)
+        if pid >= 0 and pid in seen:
+            warm.append(ttft)
+        else:
+            cold.append(ttft)
+            if pid >= 0:
+                seen.add(pid)
+    med = lambda a: float(np.percentile(np.asarray(a, np.float64), 50)) if a else 0.0
+    return med(warm), med(cold), len(warm), len(cold)
 
 
 def bench_traffic(args) -> dict:
@@ -77,7 +103,10 @@ def bench_traffic(args) -> dict:
     cfg, rs = build_fleet(args.arch, args.replicas, args.max_batch,
                           args.max_len, clock,
                           step_cost_ms=(args.step_cost_ms if args.virtual
-                                        else 0.0))
+                                        else 0.0),
+                          prefix_cache=args.prefix_cache,
+                          page_size=args.page_size,
+                          token_budget=args.token_budget)
     if not args.virtual:
         # wall mode: pay jit compile OUTSIDE the measured trace, or the
         # first request's TTFT is compile time, not serving time
@@ -98,17 +127,33 @@ def bench_traffic(args) -> dict:
                          output_lens=((2, 6), (8, 16)),
                          output_mix=(0.7, 0.3),
                          vocab=cfg.vocab, slo_ttft_s=args.slo_ttft,
-                         deadline_s=args.deadline, seed=args.seed)
+                         deadline_s=args.deadline,
+                         shared_prefix_len=args.shared_prefix_len,
+                         n_shared_prefixes=args.shared_count,
+                         shared_fraction=args.shared_fraction,
+                         seed=args.seed)
     kills = [(float(t), int(i)) for t, i in
              (k.split(":") for k in args.kill)]
     router = SLORouter(rs)
     router.run_trace(poisson_trace(tcfg), kills=kills)
     m = router.metrics()
+    warm_p50, cold_p50, n_warm, n_cold = warm_cold_ttft(router.results())
     return {
+        "prefix_cache": bool(args.prefix_cache),
+        "page_size": args.page_size,
+        "shared_prefix_len": args.shared_prefix_len,
+        "prefix_hit_rate": round(m["prefix_hit_rate"], 6),
+        "pages_in_use": m["pages_in_use"],
+        "evictions": m["evictions"],
+        "ttft_warm_p50_s": round(warm_p50, 6),
+        "ttft_cold_p50_s": round(cold_p50, 6),
+        "n_warm": n_warm,
+        "n_cold": n_cold,
         "arch": cfg.name,
         "family": args.arch,
         "shape": f"traffic_r{args.replicas}_b{args.max_batch}",
-        "mode": "traffic-virtual" if args.virtual else "traffic",
+        "mode": (("traffic-virtual" if args.virtual else "traffic")
+                 + ("-prefix" if args.prefix_cache else "")),
         "status": "ok",
         "replicas": args.replicas,
         "max_batch": args.max_batch,
@@ -157,6 +202,27 @@ def main():
     ap.add_argument("--kill", nargs="*", default=[], metavar="AT_S:REPLICA",
                     help="fail-in-place events, e.g. 0.5:0 kills replica 0 "
                          "half a second into the trace")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="serve with the paged KV pool + radix prefix cache")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-step prompt-token admission budget (0 = "
+                         "unbounded). Set ~ the prefill chunk so cold "
+                         "prefills span multiple (costed) steps and the "
+                         "warm-vs-cold TTFT gap is measurable")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="shared-system-prompt mixture: prefix tokens "
+                         "(0 = no mixture)")
+    ap.add_argument("--shared-count", type=int, default=2,
+                    help="distinct shared prefixes in the pool")
+    ap.add_argument("--shared-fraction", type=float, default=0.9,
+                    help="fraction of requests opening with a shared prefix")
+    ap.add_argument("--min-prefix-hit", type=float, default=0.0,
+                    help="fail (exit 1) below this prefix hit rate (0 = "
+                         "report only)")
+    ap.add_argument("--require-warm-ttft", action="store_true",
+                    help="fail (exit 1) unless warm-prefix p50 TTFT beats "
+                         "cold p50 TTFT")
     ap.add_argument("--min-slo-attainment", type=float, default=0.0,
                     help="fail (exit 1) below this SLO attainment (0 = "
                          "report only)")
@@ -173,6 +239,12 @@ def main():
           f"SLO {row['slo_attainment']:.3f}  "
           f"fin/shed/rej {row['requests_finished']}/{row['requests_shed']}/"
           f"{row['requests_rejected']}")
+    if args.prefix_cache or args.shared_prefix_len:
+        print(f"{'':12s} prefix hit {row['prefix_hit_rate']:.3f}  "
+              f"warm/cold ttft p50 {row['ttft_warm_p50_s']*1e3:.1f}/"
+              f"{row['ttft_cold_p50_s']*1e3:.1f} ms "
+              f"({row['n_warm']}/{row['n_cold']} reqs)  "
+              f"pages {row['pages_in_use']}  evictions {row['evictions']}")
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -187,6 +259,15 @@ def main():
     if args.max_p99_ttft > 0 and row["ttft_p99_s"] > args.max_p99_ttft:
         failures.append(f"p99 TTFT {row['ttft_p99_s']:.3f}s "
                         f"> {args.max_p99_ttft:.3f}s")
+    if args.min_prefix_hit > 0 and row["prefix_hit_rate"] < args.min_prefix_hit:
+        failures.append(f"prefix hit rate {row['prefix_hit_rate']:.3f} "
+                        f"< {args.min_prefix_hit:.3f}")
+    if args.require_warm_ttft and not (row["n_warm"] > 0
+                                       and row["ttft_warm_p50_s"]
+                                       < row["ttft_cold_p50_s"]):
+        failures.append(f"warm p50 TTFT {row['ttft_warm_p50_s']:.4f}s not "
+                        f"below cold {row['ttft_cold_p50_s']:.4f}s "
+                        f"({row['n_warm']} warm / {row['n_cold']} cold)")
     if failures:
         print("TRAFFIC SLO GATE FAILED:\n  " + "\n  ".join(failures),
               file=sys.stderr)

@@ -154,6 +154,37 @@ def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool | None = Non
     return _ssd.ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_decode(x, dt, A, B, C, D, state, *, interpret: bool | None = None):
+    """One-token SSD recurrence on the stacked decode cache — the serving
+    decode step routed through the scan kernel at ``s = chunk = 1`` with
+    the slot states as the carried initial state.
+
+    Shapes mirror ``models.ssm.ssd_decode_step``: x (B,1,H,P); dt (B,1,H)
+    (post-softplus, f32); A (H,); B/C (B,1,G,N); D (H,); state (B,H,P,N)
+    f32. Returns (y (B,1,H,P) in x.dtype, new_state f32). The kernel body
+    performs the identical decay/update/readout arithmetic on the identical
+    f32 operands, so interpret mode (CPU/CI) is bit-exact with the jnp
+    recurrence — the fused serving path's token-exactness contract.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, _, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hb = h // g
+    xf = x[:, 0].astype(jnp.float32).reshape(b * h, 1, p)
+    dtf = dt[:, 0].astype(jnp.float32).reshape(b * h, 1)
+    Bh = jnp.repeat(B[:, 0].astype(jnp.float32), hb, axis=1).reshape(b * h, 1, n)
+    Ch = jnp.repeat(C[:, 0].astype(jnp.float32), hb, axis=1).reshape(b * h, 1, n)
+    Af = jnp.broadcast_to(A.astype(jnp.float32), (b, h)).reshape(b * h)
+    Df = jnp.broadcast_to(D.astype(jnp.float32), (b, h)).reshape(b * h)
+    y, fin = _ssd.ssd_scan_pallas(
+        xf, dtf, Af, Bh, Ch, Df, chunk=1, interpret=interpret,
+        initial_state=state.reshape(b * h, p, n), return_final_state=True)
+    return (y.reshape(b, h, p)[:, None].astype(x.dtype),
+            fin.reshape(b, h, p, n))
+
+
 # Re-exported oracles (tests and low-stakes call sites)
 cascade_matmul_ref = _ref.cascade_matmul_ref
 flash_attention_ref = _ref.flash_attention_ref

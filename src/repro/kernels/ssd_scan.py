@@ -53,7 +53,45 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref, *, chun
     y_ref[0] = ys.astype(y_ref.dtype)
 
 
-def ssd_scan_pallas(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = False):
+def _kernel_carry(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, s0_ref,
+                  y_ref, out_s_ref, state_ref, *, chunk):
+    """The scan kernel with a caller-supplied initial state and the final
+    state emitted as a second output — the serving-decode entry point (a
+    decode step is this kernel at s = chunk = 1)."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0]
+
+    a = a_ref[0]
+    dskip = d_ref[0]
+    x = x_ref[0].astype(jnp.float32)      # (q, P)
+    dt = dt_ref[0].astype(jnp.float32)    # (q,)
+    bb = b_ref[0].astype(jnp.float32)     # (q, N)
+    cc = c_ref[0].astype(jnp.float32)     # (q, N)
+
+    def step(i, carry):
+        state, ys = carry
+        decay = jnp.exp(dt[i] * a)
+        state = state * decay + (dt[i] * x[i])[:, None] * bb[i][None, :]   # (P,N)
+        y = state @ cc[i] + dskip * x[i]                                    # (P,)
+        ys = jax.lax.dynamic_update_slice(ys, y[None], (i, 0))
+        return state, ys
+
+    state0 = state_ref[...]
+    ys0 = jnp.zeros((chunk, x.shape[-1]), jnp.float32)
+    state, ys = jax.lax.fori_loop(0, chunk, step, (state0, ys0))
+    state_ref[...] = state
+    y_ref[0] = ys.astype(y_ref.dtype)
+    # same (h, 0, 0) block every chunk: the last sequential write is the one
+    # flushed back to HBM, i.e. the post-scan state
+    out_s_ref[0] = state
+
+
+def ssd_scan_pallas(x, dt, A, B, C, D, *, chunk: int = 64,
+                    interpret: bool = False, initial_state=None,
+                    return_final_state: bool = False):
     bh, s, p = x.shape
     n = B.shape[-1]
     chunk = min(chunk, s)
@@ -66,20 +104,38 @@ def ssd_scan_pallas(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = Fal
         kwargs["compiler_params"] = params_cls(
             dimension_semantics=("parallel", "arbitrary"))
 
-    return pl.pallas_call(
-        functools.partial(_kernel, chunk=chunk),
+    in_specs = [
+        pl.BlockSpec((1, chunk, p), lambda h, c: (h, c, 0)),
+        pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+        pl.BlockSpec((1,), lambda h, c: (h,)),
+        pl.BlockSpec((1, chunk, n), lambda h, c: (h, c, 0)),
+        pl.BlockSpec((1, chunk, n), lambda h, c: (h, c, 0)),
+        pl.BlockSpec((1,), lambda h, c: (h,)),
+    ]
+    scratch = [pltpu.VMEM((p, n), jnp.float32)] if pltpu is not None else []
+    if initial_state is None and not return_final_state:
+        return pl.pallas_call(
+            functools.partial(_kernel, chunk=chunk),
+            grid=(bh, nc),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, chunk, p), lambda h, c: (h, c, 0)),
+            out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            scratch_shapes=scratch,
+            interpret=interpret,
+            **kwargs,
+        )(x, dt, A, B, C, D)
+    s0 = (jnp.zeros((bh, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    y, fin = pl.pallas_call(
+        functools.partial(_kernel_carry, chunk=chunk),
         grid=(bh, nc),
-        in_specs=[
-            pl.BlockSpec((1, chunk, p), lambda h, c: (h, c, 0)),
-            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
-            pl.BlockSpec((1,), lambda h, c: (h,)),
-            pl.BlockSpec((1, chunk, n), lambda h, c: (h, c, 0)),
-            pl.BlockSpec((1, chunk, n), lambda h, c: (h, c, 0)),
-            pl.BlockSpec((1,), lambda h, c: (h,)),
-        ],
-        out_specs=pl.BlockSpec((1, chunk, p), lambda h, c: (h, c, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
-        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)] if pltpu is not None else [],
+        in_specs=in_specs + [pl.BlockSpec((1, p, n), lambda h, c: (h, 0, 0))],
+        out_specs=[pl.BlockSpec((1, chunk, p), lambda h, c: (h, c, 0)),
+                   pl.BlockSpec((1, p, n), lambda h, c: (h, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+                   jax.ShapeDtypeStruct((bh, p, n), jnp.float32)],
+        scratch_shapes=scratch,
         interpret=interpret,
         **kwargs,
-    )(x, dt, A, B, C, D)
+    )(x, dt, A, B, C, D, s0)
+    return (y, fin) if return_final_state else y

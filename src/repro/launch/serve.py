@@ -43,6 +43,15 @@ def main():
                          "kernels (packed-FP4 matmul + decode attention); "
                          "needs FP4 params — incompatible with --no-fp4 and "
                          "--mesh (downgrades with a warning)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="serve from the paged KV pool with the radix-tree "
+                         "prefix cache: shared prompt prefixes admit "
+                         "through already-resident pages instead of "
+                         "re-prefilling (token-exact with the dense "
+                         "engine; ring/recurrent archs downgrade with a "
+                         "warning)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page under --prefix-cache")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="> 0 enables seeded sampling (default: greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -108,7 +117,9 @@ def main():
                        max_len=args.prompt_len + args.max_new + 1,
                        temperature=args.temperature, top_k=args.top_k,
                        draft_len=args.draft_len, ngram_max=args.ngram_max,
-                       tp_policy=args.tp_policy, fused=args.fused)
+                       tp_policy=args.tp_policy, fused=args.fused,
+                       prefix_cache=args.prefix_cache,
+                       page_size=args.page_size)
 
     if args.traffic:
         if mesh is not None or args.verify_hlo:
@@ -184,9 +195,19 @@ def main():
                 raise SystemExit(1)
 
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
+    # under --prefix-cache the demo requests share their first half (the
+    # "same system prompt, different user turn" shape the radix cache
+    # serves): every admission after the first re-pins the resident pages
+    shared = (rng.integers(0, cfg.vocab,
+                           size=args.prompt_len // 2).astype(np.int32)
+              if args.prefix_cache and args.prompt_len >= 2 else None)
+    tail = args.prompt_len - (len(shared) if shared is not None else 0)
+
+    def _prompt():
+        p = rng.integers(0, cfg.vocab, size=tail).astype(np.int32)
+        return p if shared is None else np.concatenate([shared, p])
+
+    reqs = [Request(uid=i, prompt=_prompt(), max_new_tokens=args.max_new)
             for i in range(args.requests)]
     for r in reqs:
         eng.submit(r)
@@ -206,6 +227,11 @@ def main():
     print(f"served {args.requests} requests, {total} tokens in {dt:.2f}s "
           f"({total / max(dt, 1e-9):.1f} tok/s), p99 step {eng.straggler_p99()*1e3:.1f} ms, "
           f"batched={m['batched']}{spec}{mstr}, admission wait {m['admission_wait_s_mean']*1e3:.1f} ms")
+    if m["paged"]:
+        print(f"  prefix cache: hit rate {m['prefix_hit_rate']:.2f} "
+              f"({m['prefix_hits']}/{m['prefix_lookups']} tokens), "
+              f"pages {m['pages_in_use']}/{m['pages_total']} "
+              f"(page_size={m['page_size']}), evictions {m['evictions']}")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.tokens_out}")
 

@@ -215,6 +215,145 @@ def slice_rows_per_slot(ck: jax.Array, keep, b_axis: int, n: int) -> jax.Array:
     return jnp.take_along_axis(ck, idx, axis=t_axis)
 
 
+# ---------------------------------------------------------------------------
+# paged KV pool primitives
+#
+# The paged layout replaces each seq-indexed buffer's per-slot row band with
+# a shared page pool: ``(num_pages, page_size, rest...)`` leaves plus a
+# host-owned ``(B, blocks_per_slot)`` int32 block table mapping each slot's
+# logical block to a physical page. Page 0 is the TRASH page — never
+# allocated, pinned by the pool — so zeroed block-table rows (freed slots)
+# and out-of-capacity pad writes land somewhere harmless instead of
+# corrupting live state. Reads gather the slot's pages back into the SAME
+# dense ``(B, T, rest)`` view the dense engine attends over; rows backed by
+# the trash page are garbage but sit above ``pos`` where the additive
+# ``-1e30`` mask drives their softmax weight to exactly 0.0 — the paged
+# step is bit-identical to the dense step, not just close.
+# ---------------------------------------------------------------------------
+
+
+def paged_phys_rows(bt: jax.Array, rows: jax.Array, page_size: int) -> jax.Array:
+    """Logical rows -> physical flat rows through a block table.
+
+    bt: (lead..., B, nb) int32 page ids; rows: (lead..., B, s) logical
+    positions. Rows past capacity (``>= nb * page_size``) map into the
+    trash page (page 0) rather than clamping onto a live page.
+    """
+    nb = bt.shape[-1]
+    blk = jnp.clip(rows // page_size, 0, nb - 1)
+    page = jnp.take_along_axis(bt, blk, axis=-1)
+    phys = page * page_size + rows % page_size
+    return jnp.where(rows < nb * page_size, phys, rows % page_size)
+
+
+def paged_gather(pool: jax.Array, bt: jax.Array, page_size: int) -> jax.Array:
+    """Dense per-slot view of a page pool: (P, ps, rest) -> (B, nb*ps, rest).
+
+    The gathered view is exactly the dense cache the non-paged engine
+    attends over for rows the slot has written; unbacked rows read the
+    trash page and must be mask-invalid (they are: ``row > pos``).
+    """
+    p, ps = pool.shape[0], page_size
+    flat = pool.reshape((p * ps,) + pool.shape[2:])
+    idx = bt[..., None] * ps + jnp.arange(ps, dtype=jnp.int32)
+    return jnp.take(flat, idx.reshape(bt.shape[0], -1), axis=0)
+
+
+def paged_update_rows(pool: jax.Array, new: jax.Array, bt: jax.Array,
+                      pos: jax.Array, page_size: int) -> jax.Array:
+    """Write ``new`` (B, s, rest) at logical rows ``pos..pos+s-1`` through
+    the block table. Writes whose block is unallocated (page 0 in the
+    table) or past capacity collide on the trash page — harmless, never
+    validly read."""
+    b, s = new.shape[:2]
+    rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    phys = paged_phys_rows(bt, rows, page_size)              # (B, s)
+    flat = pool.reshape((pool.shape[0] * page_size,) + pool.shape[2:])
+    out = flat.at[phys.reshape(-1)].set(
+        new.reshape((b * s,) + new.shape[2:]).astype(pool.dtype))
+    return out.reshape(pool.shape)
+
+
+def _gather_rows(buf: jax.Array, idx: jax.Array, axis: int) -> jax.Array:
+    """Per-lead-row gather: buf (lead..., N, rest), idx (lead..., m) ->
+    (lead..., m, rest). The read dual of ``_scatter_rows``."""
+    lead = buf.shape[:axis]
+    n = 1
+    for d in lead:
+        n *= d
+    buf2 = buf.reshape((n,) + buf.shape[axis:])
+    idx2 = idx.reshape(n, -1)
+    out = jax.vmap(lambda bu, ix: jnp.take(bu, ix, axis=0))(buf2, idx2)
+    return out.reshape(lead + idx.shape[len(lead):] + buf.shape[axis + 1:])
+
+
+def paged_rows_snapshot(cache: dict, bt: jax.Array, s: int) -> dict:
+    """Paged analogue of ``seq_rows_snapshot``: capture the ``s`` physical
+    rows a verify extend will write through the block table.
+
+    ``cache`` holds pool leaves ``(lead..., P, ps, rest)`` plus ``pos``
+    ``(lead..., B)``; ``bt`` is ``(B, nb)`` (shared across lead dims).
+    """
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    rows = pos[..., None] + jnp.arange(s, dtype=jnp.int32)   # (lead..., B, s)
+    lead = pos.shape[:-1]
+    btb = jnp.broadcast_to(bt, lead + bt.shape)
+    snap = {"pos": pos}
+    for name, buf in cache.items():
+        if name in ("pos", "block_table"):
+            continue
+        ps = buf.shape[pos.ndim]                             # lead + (P, ps, rest)
+        phys = paged_phys_rows(btb, rows, ps)                # (lead..., B, s)
+        flat = buf.reshape(lead + (buf.shape[pos.ndim - 1] * ps,) + buf.shape[pos.ndim + 1:])
+        snap[name] = _gather_rows(flat, phys, axis=pos.ndim - 1)
+    return snap
+
+
+def paged_rows_restore(cache: dict, snap: dict, bt: jax.Array, keep) -> dict:
+    """Rewind a paged cache after a verify pass: restore the rejected chunk
+    rows from the snapshot and rewind ``pos`` to ``pos0 + keep``. Pages the
+    chunk spilled into stay mapped — the host releases them only at retire."""
+    pos0 = snap["pos"]
+    keep_f = jnp.broadcast_to(jnp.asarray(keep, jnp.int32), pos0.shape)
+    any_buf = next(k for k in snap if k != "pos")
+    s = snap[any_buf].shape[pos0.ndim]
+    rows = pos0[..., None] + jnp.arange(s, dtype=jnp.int32)
+    lead = pos0.shape[:-1]
+    btb = jnp.broadcast_to(bt, lead + bt.shape)
+    rejected = jnp.arange(s, dtype=jnp.int32) >= keep_f[..., None]
+    new = {"pos": pos0 + keep_f}
+    for name, buf in cache.items():
+        if name in ("pos", "block_table"):
+            continue
+        ps = buf.shape[pos0.ndim]
+        phys = paged_phys_rows(btb, rows, ps)
+        flat = buf.reshape(lead + (buf.shape[pos0.ndim - 1] * ps,) + buf.shape[pos0.ndim + 1:])
+        cur = _gather_rows(flat, phys, axis=pos0.ndim - 1)
+        mask = rejected.reshape(rejected.shape + (1,) * (buf.ndim - pos0.ndim - 1))
+        val = jnp.where(mask, snap[name], cur)
+        flat2 = _scatter_rows(flat, phys.reshape(lead + (-1,)),
+                              val.reshape(lead + (-1,) + flat.shape[pos0.ndim:]),
+                              axis=pos0.ndim - 1)
+        new[name] = flat2.reshape(buf.shape)
+    return new
+
+
+def reset_slot_pos(cache: Any, slot, value) -> Any:
+    """Set every per-slot ``pos`` entry for ``slot`` to ``value``.
+
+    Paged admission prefills directly into the resident grid, so a slot
+    that matched ``value`` prefix tokens in the radix cache starts its
+    suffix prefill at ``pos = value`` (dense admission instead stages a
+    fresh batch-1 cache whose pos starts at 0).
+    """
+    def one(path, x):
+        last = path[-1] if path else None
+        if getattr(last, "key", None) == "pos":
+            return x.at[..., slot].set(jnp.asarray(value, x.dtype))
+        return x
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
 class StackedCacheMixin:
     """Stacked-cache protocol shared by every registry model.
 

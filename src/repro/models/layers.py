@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core import cascade
 from repro.core.cascade import CascadeConfig
 from repro.distributed.sharding import constrain_attn_queries, constrain_matmul_input
+from repro.models import cache_utils
 
 
 # ---------------------------------------------------------------------------
@@ -270,9 +271,25 @@ def attn_apply(
         k = constrain_matmul_input(k)
         v = constrain_matmul_input(v)
         pos = pos_rows(cache["pos"], b)                 # (B,) next write index
-        t = cache["k"].shape[1]
+        bt = cache.get("block_table")                   # (B, nb) => paged pool
+        ps_page = cache["k"].shape[1] if bt is not None else 0
+        t = bt.shape[-1] * ps_page if bt is not None else cache["k"].shape[1]
         nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
-        if cfg.window > 0 and mode == "decode":         # ring buffer, one token
+        if bt is not None:
+            # paged pool: scatter the new K/V through the block table, then
+            # gather the slot's pages back into the SAME dense (B, T, ...)
+            # view the dense branch attends over. Rows backed by the trash
+            # page are garbage but sit above pos — the -1e30 mask zeroes
+            # them exactly, so this path is bit-identical to the dense one.
+            assert cfg.window == 0, "paged attention requires full attention"
+            ck = cache_utils.paged_update_rows(cache["k"], k, bt, pos, ps_page)
+            cv = cache_utils.paged_update_rows(cache["v"], v, bt, pos, ps_page)
+            rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            valid = jnp.arange(t)[None, None, :] <= rows[:, :, None]
+            new_cache = {"k": ck, "v": cv, "pos": pos + nv}
+            att_k = cache_utils.paged_gather(ck, bt, ps_page)
+            att_v = cache_utils.paged_gather(cv, bt, ps_page)
+        elif cfg.window > 0 and mode == "decode":       # ring buffer, one token
             idx = pos % t
             ck = update_rows(cache["k"], k, idx)
             cv = update_rows(cache["v"], v, idx)
@@ -401,6 +418,21 @@ def attn_cache_init(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat1
     return {
         "k": jnp.zeros((batch, max_len, hk, hd), dtype),
         "v": jnp.zeros((batch, max_len, hk, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def attn_cache_init_paged(batch: int, num_pages: int, page_size: int,
+                          cfg: AttnConfig, dtype=jnp.bfloat16) -> dict:
+    """Paged-pool attention cache: K/V live in a shared page pool instead of
+    per-slot dense rows. The (B, nb) block table is NOT a cache leaf — the
+    host owns it and threads it in per step via the batch dict (page
+    allocation is a host decision; the device cache stays donate-safe)."""
+    assert cfg.window == 0, "paged attention requires full attention"
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((num_pages, page_size, hk, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, hk, hd), dtype),
         "pos": jnp.zeros((batch,), jnp.int32),
     }
 

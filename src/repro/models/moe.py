@@ -27,7 +27,9 @@ from repro.distributed.sharding import (constrain_expert_buffer,
                                         constrain_replicated,
                                         constrain_residual)
 from repro.models import layers as L
-from repro.models.cache_utils import (StackedCacheMixin, seq_rows_restore,
+from repro.models.cache_utils import (StackedCacheMixin, paged_gather,
+                                      paged_rows_restore, paged_rows_snapshot,
+                                      paged_update_rows, seq_rows_restore,
                                       seq_rows_snapshot, take_last_valid)
 
 
@@ -206,9 +208,24 @@ def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len
         assert mode == "extend" or s == 1
         pos = L.pos_rows(cache["pos"], b)                     # (B,) per-slot
         nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
-        ckv = L.update_rows(cache["c_kv"], c_kv, pos)
-        krp = L.update_rows(cache["k_rope"], k_rope, pos)
-        t = ckv.shape[1]
+        bt = cache.get("block_table")
+        if bt is not None:
+            # paged latent pool: scatter through the block table, gather the
+            # slot's pages back into the dense (B, T, ...) view the scores
+            # below contract over — bit-identical to the dense path (trash-
+            # page rows sit above pos where the -1e30 mask zeroes them).
+            ps_page = cache["c_kv"].shape[1]
+            ckv_pool = paged_update_rows(cache["c_kv"], c_kv, bt, pos, ps_page)
+            krp_pool = paged_update_rows(cache["k_rope"], k_rope, bt, pos, ps_page)
+            ckv = paged_gather(ckv_pool, bt, ps_page)
+            krp = paged_gather(krp_pool, bt, ps_page)
+            t = bt.shape[-1] * ps_page
+            new_cache = {"c_kv": ckv_pool, "k_rope": krp_pool, "pos": pos + nv}
+        else:
+            ckv = L.update_rows(cache["c_kv"], c_kv, pos)
+            krp = L.update_rows(cache["k_rope"], k_rope, pos)
+            t = ckv.shape[1]
+            new_cache = {"c_kv": ckv, "k_rope": krp, "pos": pos + nv}
         rows = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B, s)
         # weight absorption: stay in latent space
         q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
@@ -219,7 +236,6 @@ def mla_apply(params, x, cfg: ArchConfig, ccfg, cache=None, mode="full", max_len
         p = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhst,btl->bshl", p, ckv.astype(jnp.float32))
         o = jnp.einsum("bshl,lhd->bshd", ctx, w_v.astype(jnp.float32))  # (b,s,H,v)
-        new_cache = {"c_kv": ckv, "k_rope": krp, "pos": pos + nv}
     else:
         # expand latents to per-head keys/values (prefill & train)
         k_nope = jnp.einsum("btl,lhd->bthd", c_kv.astype(jnp.float32), w_k.astype(jnp.float32))
@@ -253,6 +269,15 @@ def mla_cache_init(batch: int, max_len: int, cfg: ArchConfig, dtype=jnp.bfloat16
     return {
         "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
         "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_cache_init_paged(batch: int, num_pages: int, page_size: int,
+                         cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((num_pages, page_size, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((num_pages, page_size, cfg.qk_rope_dim), dtype),
         "pos": jnp.zeros((batch,), jnp.int32),
     }
 
@@ -380,6 +405,38 @@ class MoELM(StackedCacheMixin):
             "layers": jax.vmap(one)(jnp.arange(n_moe)),
         }
 
+    # ------------------------------------------------------- paged cache API
+    @property
+    def paged_attention(self) -> bool:
+        return True  # MLA latents and GQA KV both page (full attention)
+
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+
+        def one(_):
+            return (mla_cache_init_paged(batch, num_pages, page_size, cfg, dtype)
+                    if self.use_mla
+                    else L.attn_cache_init_paged(batch, num_pages, page_size,
+                                                 self.attn_cfg, dtype))
+
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        return {
+            "dense_layers": [one(None) for _ in range(cfg.first_dense_layers)],
+            "layers": jax.vmap(one)(jnp.arange(n_moe)),
+        }
+
+    def paged_copy_page(self, cache: dict, src, dst) -> dict:
+        """Copy physical page ``src`` to ``dst`` in every pool leaf (radix
+        copy-on-write). Per-layer dense caches carry the page axis first;
+        the scanned stack carries it after the layer axis."""
+        cp_flat = lambda c: {k: (v if k == "pos" else v.at[dst].set(v[src]))
+                             for k, v in c.items()}
+        cp_stk = lambda c: {k: (v if k == "pos" else v.at[:, dst].set(v[:, src]))
+                            for k, v in c.items()}
+        return {"dense_layers": [cp_flat(c) for c in cache["dense_layers"]],
+                "layers": cp_stk(cache["layers"])}
+
     def prefill(self, params, batch, ccfg, max_len: int | None = None):
         x = L.embed_apply(params["embed"], batch["tokens"])
         dense_caches = []
@@ -397,13 +454,18 @@ class MoELM(StackedCacheMixin):
 
     def decode_step(self, params, batch, cache, ccfg):
         x = L.embed_apply(params["embed"], batch["tokens"])
+        bt = batch.get("block_table")
         new_dense = []
         for dp, dc in zip(params["dense_layers"], cache["dense_layers"]):
+            if bt is not None:
+                dc = dict(dc, block_table=bt)
             x, nc = self._block(dp, x, ccfg, dc, "decode", moe=False)
             new_dense.append(nc)
 
         def body(x, scanned):
             lp, c = scanned
+            if bt is not None:
+                c = dict(c, block_table=bt)
             y, nc = self._block(lp, x, ccfg, c, "decode", moe=True)
             return y, nc
 
@@ -423,13 +485,18 @@ class MoELM(StackedCacheMixin):
         x = L.embed_apply(params["embed"], batch["tokens"])
         b, s = batch["tokens"].shape
         nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
+        bt = batch.get("block_table")
         new_dense = []
         for dp, dc in zip(params["dense_layers"], cache["dense_layers"]):
+            if bt is not None:
+                dc = dict(dc, block_table=bt)
             x, nc = self._block(dp, x, ccfg, dc, "extend", moe=False, n_valid=nv)
             new_dense.append(nc)
 
         def body(x, scanned):
             lp, c = scanned
+            if bt is not None:
+                c = dict(c, block_table=bt)
             y, nc = self._block(lp, x, ccfg, c, "extend", moe=True, n_valid=nv)
             return y, nc
 
@@ -444,15 +511,27 @@ class MoELM(StackedCacheMixin):
         per-position logits, advanced cache, and the overwritten MLA-latent
         (or GQA KV) rows as the rewind checkpoint."""
         s = batch["tokens"].shape[1]
-        ckpt = {"dense_layers": [seq_rows_snapshot(c, s)
-                                 for c in cache["dense_layers"]],
-                "layers": seq_rows_snapshot(cache["layers"], s)}
+        bt = batch.get("block_table")
+        if bt is not None:
+            ckpt = {"dense_layers": [paged_rows_snapshot(c, bt, s)
+                                     for c in cache["dense_layers"]],
+                    "layers": paged_rows_snapshot(cache["layers"], bt, s),
+                    "block_table": bt}
+        else:
+            ckpt = {"dense_layers": [seq_rows_snapshot(c, s)
+                                     for c in cache["dense_layers"]],
+                    "layers": seq_rows_snapshot(cache["layers"], s)}
         logits, cache = self.prefill_extend(params, batch, cache, ccfg,
                                             all_logits=True)
         return logits, cache, ckpt
 
     def spec_rewind(self, cache, ckpt, keep):
         """Per-slot rewind: restore rejected latent/KV rows, rewind pos."""
+        bt = ckpt.get("block_table")
+        if bt is not None:
+            return {"dense_layers": [paged_rows_restore(c, k, bt, keep) for c, k in
+                                     zip(cache["dense_layers"], ckpt["dense_layers"])],
+                    "layers": paged_rows_restore(cache["layers"], ckpt["layers"], bt, keep)}
         return {"dense_layers": [seq_rows_restore(c, k, keep) for c, k in
                                  zip(cache["dense_layers"], ckpt["dense_layers"])],
                 "layers": seq_rows_restore(cache["layers"], ckpt["layers"], keep)}

@@ -246,7 +246,20 @@ class Mamba2LM(StackedCacheMixin):
 
         ckpt = None
         if mode == "decode":
-            y, new_state = ssd_decode_step(x, dt, A, B, C, lp["D"], cache["state"])
+            if ccfg.use_kernel:
+                # fused serving: the single-token recurrence runs through the
+                # Pallas SSD scan kernel (s = chunk = 1, slot states carried
+                # in) — bit-exact with the jnp step in interpret mode. Extend
+                # stays on the chunked dual form: its matmul-reassociated
+                # arithmetic is a DIFFERENT (equally exact-to-spec) reduction
+                # order, so routing it through the sequential kernel would
+                # break prefill/decode cross-parity tests, not improve them.
+                from repro.kernels import ops
+                y, new_state = ops.ssd_decode(x, dt, A, B, C, lp["D"],
+                                              cache["state"])
+            else:
+                y, new_state = ssd_decode_step(x, dt, A, B, C, lp["D"],
+                                               cache["state"])
             new_cache = {"conv": new_conv, "state": new_state}
         elif mode == "extend" and collect:
             # chunk=1 SSD emits the state after EVERY token (states_prev with

@@ -20,7 +20,8 @@ from repro.core.cascade import CascadeConfig
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import constrain_residual
 from repro.models import layers as L
-from repro.models.cache_utils import (StackedCacheMixin, seq_rows_restore,
+from repro.models.cache_utils import (StackedCacheMixin, paged_rows_restore,
+                                      paged_rows_snapshot, seq_rows_restore,
                                       seq_rows_snapshot, take_last_valid)
 
 
@@ -145,6 +146,29 @@ class TransformerLM(StackedCacheMixin):
         one = lambda _: L.attn_cache_init(batch, max_len, self.attn_cfg, dtype)
         return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
 
+    # ------------------------------------------------------- paged cache API
+    @property
+    def paged_attention(self) -> bool:
+        """Full-attention archs page; ring state is O(window) and per-slot
+        (nothing to share), multi-codebook grids serve slot-wise anyway."""
+        return self.attn_cfg.window == 0 and not self.cfg.n_codebooks
+
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        one = lambda _: L.attn_cache_init_paged(batch, num_pages, page_size,
+                                                self.attn_cfg, dtype)
+        return {"layers": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+
+    def paged_copy_page(self, cache: dict, src, dst) -> dict:
+        """Copy physical page ``src`` to ``dst`` in every pool leaf — the
+        device half of radix-cache copy-on-write (a partially matched
+        shared page is cloned before the new stream writes into it)."""
+        out = {}
+        for name, buf in cache["layers"].items():
+            out[name] = buf if name == "pos" else buf.at[:, dst].set(buf[:, src])
+        return {"layers": out}
+
     def prefill(self, params: dict, batch: dict, ccfg: CascadeConfig,
                 max_len: int | None = None):
         cfg = self.cfg
@@ -163,9 +187,12 @@ class TransformerLM(StackedCacheMixin):
         cfg = self.cfg
         x = self._embed(params, batch, ccfg)
         positions = batch.get("positions")
+        bt = batch.get("block_table")
 
         def body(x, scanned):
             lp, c = scanned
+            if bt is not None:
+                c = dict(c, block_table=bt)
             y, nc = self._block(lp, x, ccfg, positions, c, "decode")
             return y, nc
 
@@ -194,9 +221,12 @@ class TransformerLM(StackedCacheMixin):
         x = self._embed(params, batch, ccfg)
         b, s, _ = x.shape
         nv = jnp.asarray(s if n_valid is None else n_valid, jnp.int32)
+        bt = batch.get("block_table")
 
         def body(x, scanned):
             lp, c = scanned
+            if bt is not None:
+                c = dict(c, block_table=bt)
             y, nc = self._block(lp, x, ccfg, None, c, "extend", n_valid=nv)
             return y, nc
 
@@ -211,8 +241,13 @@ class TransformerLM(StackedCacheMixin):
         logits (B, 1+K, V), the advanced cache, and a rewind checkpoint
         (the KV rows the chunk overwrites — for ring buffers those are live
         in-window entries that a rejection must restore)."""
-        ckpt = {"layers": seq_rows_snapshot(cache["layers"],
-                                            batch["tokens"].shape[1])}
+        bt = batch.get("block_table")
+        s = batch["tokens"].shape[1]
+        if bt is not None:
+            ckpt = {"layers": paged_rows_snapshot(cache["layers"], bt, s),
+                    "block_table": bt}
+        else:
+            ckpt = {"layers": seq_rows_snapshot(cache["layers"], s)}
         logits, cache = self.prefill_extend(params, batch, cache, ccfg,
                                             all_logits=True)
         return logits, cache, ckpt
@@ -220,5 +255,11 @@ class TransformerLM(StackedCacheMixin):
     def spec_rewind(self, cache: dict, ckpt: dict, keep) -> dict:
         """Per-slot rewind after a verify pass: the first ``keep[b]`` chunk
         tokens stay committed, the rejected suffix rows are restored and
-        ``pos`` rewinds to ``pos0 + keep[b]``."""
+        ``pos`` rewinds to ``pos0 + keep[b]``. Paged checkpoints carry the
+        block table the verify wrote through; pages the chunk spilled into
+        stay mapped (the host releases them at retire)."""
+        bt = ckpt.get("block_table")
+        if bt is not None:
+            return {"layers": paged_rows_restore(cache["layers"],
+                                                 ckpt["layers"], bt, keep)}
         return {"layers": seq_rows_restore(cache["layers"], ckpt["layers"], keep)}

@@ -103,6 +103,8 @@ import numpy as np
 from repro.core import crest
 from repro.core.cascade import CascadeConfig
 from repro.distributed import sharding as shd
+from repro.models.cache_utils import reset_slot_pos
+from repro.serve.prefix import PagePool, RadixPrefixCache
 from repro.serve.spec import ngram_propose
 from repro.serve.traffic import MonotonicClock
 
@@ -248,6 +250,9 @@ class Request:
     deadline_s: float = 0.0       # admission deadline: the router sheds the
                                   # request if not dispatched within this
                                   # many seconds of arrival
+    prefix_id: int = -1           # shared-prefix pool tag from the traffic
+                                  # generator (-1 = unique prompt): benches
+                                  # split warm vs cold TTFT on it
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,6 +293,22 @@ class ServeConfig:
                                   # params and the batched path; interpret
                                   # mode keeps it runnable (and token-exact
                                   # vs the jnp path) on CPU
+    paged: bool = False           # page-granular KV pool: cache leaves are
+                                  # (num_pages, page_size, ...) with host-
+                                  # owned per-slot block tables; token-exact
+                                  # with the dense cache. Full-attention
+                                  # archs only (ring/recurrent downgrade
+                                  # with a warning); incompatible with mesh
+    page_size: int = 16           # tokens per physical page
+    num_pages: int = 0            # pool size (0 = auto: max_batch *
+                                  # blocks_per_slot + 1 — enough that every
+                                  # slot can always fill, plus the trash page)
+    prefix_cache: bool = False    # radix-tree prefix cache over token-id
+                                  # prompts: admission maps shared prefixes
+                                  # to resident pages instead of
+                                  # re-prefilling them (implies paged)
+    evict_watermark: float = 0.9  # pool-pressure fraction above which LRU
+                                  # tree-only pages are evicted at alloc time
 
 
 @dataclasses.dataclass
@@ -450,6 +471,34 @@ class ServeEngine:
                 self.fused = True
                 ccfg = dataclasses.replace(ccfg, use_kernel=True)
                 self.ccfg = ccfg
+        # paged KV: one fixed-shape page pool per cache leaf, host-owned
+        # per-slot block tables, gather-based dense views inside the jitted
+        # steps (token-exact with the dense cache). Prefix caching rides on
+        # top (the radix tree maps shared prompt prefixes to resident pages).
+        self.paged = False
+        self.prefix: Optional[RadixPrefixCache] = None
+        self.pool: Optional[PagePool] = None
+        self._prefix_hits = 0
+        self._prefix_lookups = 0
+        if scfg.paged or scfg.prefix_cache:
+            if not self.batched:
+                _downgrade(
+                    "paged KV requested but the engine runs the slot-wise "
+                    "loop — paging needs the batched stacked-cache path; "
+                    "running the dense cache")
+            elif mesh is not None:
+                _downgrade(
+                    "paged KV requested with a device mesh — pool leaves "
+                    "have no slot axis to shard over data; running the "
+                    "dense cache")
+            elif not (getattr(model, "paged_attention", False)
+                      and hasattr(model, "init_paged_cache")):
+                _downgrade(
+                    "paged KV requested but this model's cache state has no "
+                    "page-granular layout (ring-buffer / recurrent / "
+                    "multi-codebook state) — running the dense cache")
+            else:
+                self.paged = True
         if self.batched:
             # round the cache length up to a chunk multiple so padded chunk
             # writes never clamp into (and clobber) valid cache entries; a
@@ -462,7 +511,35 @@ class ServeEngine:
             # inside the ring so within-chunk writes never collide (see
             # layers.attn_apply)
             self._chunk_cap = window
-            self.cache = model.init_cache(scfg.max_batch, self._cache_len, dtype=kv_dtype)
+            if self.paged:
+                ps = max(1, scfg.page_size)
+                self._page_size = ps
+                nb = -(-self._cache_len // ps)
+                self._blocks_per_slot = nb
+                self._cache_len = nb * ps
+                # default pool: every slot can fill all its blocks, plus the
+                # reserved trash page — admission can then never deadlock
+                # (tree-only pages are always evictable, see serve/prefix.py)
+                npages = scfg.num_pages or scfg.max_batch * nb + 1
+                self.cache = model.init_paged_cache(scfg.max_batch, npages,
+                                                    ps, dtype=kv_dtype)
+                self.pool = PagePool(npages)
+                self._bt = np.zeros((scfg.max_batch, nb), np.int32)
+                self._slot_pages: List[List[int]] = [
+                    [] for _ in range(scfg.max_batch)]
+                self._watermark_pages = max(
+                    1, int(scfg.evict_watermark * (npages - 1)))
+                self._copy_fn = jax.jit(
+                    lambda c_, s_, d_: model.paged_copy_page(c_, s_, d_),
+                    donate_argnums=(0,))
+                self._reset_pos_fn = jax.jit(reset_slot_pos,
+                                             donate_argnums=(0,))
+                if scfg.prefix_cache:
+                    self.prefix = RadixPrefixCache(self.pool, ps,
+                                                   copy_page=self._cow_page)
+            else:
+                self.cache = model.init_cache(scfg.max_batch, self._cache_len,
+                                              dtype=kv_dtype)
             self.caches: List[Any] = []   # unused in batched mode
             if mesh is not None:
                 # data parallelism only when the slot grid divides the data
@@ -498,26 +575,51 @@ class ServeEngine:
                 pin = lambda c_: c_
             self._pin = pin
 
-            def _decode_step(p, t, c_):
-                logits, c2 = model.decode_step(p, {"tokens": t}, c_, ccfg)
-                return logits, pin(c2)
+            # paged steps take the host-owned block table as one extra
+            # device arg ({"tokens", "block_table"} batch dict); the jitted
+            # computations are otherwise identical — the model gathers dense
+            # per-slot K/V views through the table, so shapes stay fixed
+            if self.paged:
+                def _decode_step(p, t, c_, bt):
+                    logits, c2 = model.decode_step(
+                        p, {"tokens": t, "block_table": bt}, c_, ccfg)
+                    return logits, pin(c2)
 
-            self._decode_fn = jax.jit(_decode_step, donate_argnums=(2,))
-            self._extend_fn = jax.jit(
-                lambda p, t, c_, n: model.prefill_extend(p, {"tokens": t}, c_, ccfg,
-                                                         n_valid=n),
-                donate_argnums=(2,))
-            self._write_fn = jax.jit(
-                lambda c_, s_, i: pin(model.write_cache(c_, s_, i)),
-                donate_argnums=(0,))
+                self._decode_fn = jax.jit(_decode_step, donate_argnums=(2,))
+                self._extend_fn = jax.jit(
+                    lambda p, t, c_, bt, n: model.prefill_extend(
+                        p, {"tokens": t, "block_table": bt}, c_, ccfg,
+                        n_valid=n),
+                    donate_argnums=(2,))
+            else:
+                def _decode_step(p, t, c_):
+                    logits, c2 = model.decode_step(p, {"tokens": t}, c_, ccfg)
+                    return logits, pin(c2)
+
+                self._decode_fn = jax.jit(_decode_step, donate_argnums=(2,))
+                self._extend_fn = jax.jit(
+                    lambda p, t, c_, n: model.prefill_extend(p, {"tokens": t}, c_, ccfg,
+                                                             n_valid=n),
+                    donate_argnums=(2,))
+                self._write_fn = jax.jit(
+                    lambda c_, s_, i: pin(model.write_cache(c_, s_, i)),
+                    donate_argnums=(0,))
             if self.spec:
-                def _verify_step(p, t, c_):
-                    logits, c2, ckpt = model.spec_verify(p, {"tokens": t}, c_, ccfg)
-                    return logits, pin(c2), ckpt
+                if self.paged:
+                    def _verify_step(p, t, c_, bt):
+                        logits, c2, ckpt = model.spec_verify(
+                            p, {"tokens": t, "block_table": bt}, c_, ccfg)
+                        return logits, pin(c2), ckpt
+                else:
+                    def _verify_step(p, t, c_):
+                        logits, c2, ckpt = model.spec_verify(p, {"tokens": t}, c_, ccfg)
+                        return logits, pin(c2), ckpt
 
                 self._verify_fn = jax.jit(_verify_step, donate_argnums=(2,))
                 # donate only the cache: checkpoint leaves have chunk-sized
-                # shapes no output can reuse (donating them just warns)
+                # shapes no output can reuse (donating them just warns).
+                # Paged checkpoints carry their block table, so the rewind
+                # signature is mode-independent.
                 self._rewind_fn = jax.jit(
                     lambda c_, ck, keep: pin(model.spec_rewind(c_, ck, keep)),
                     donate_argnums=(0,))
@@ -526,23 +628,40 @@ class ServeEngine:
                     # in one jitted dispatch — the acceptance uniforms, the
                     # residual resample and the bonus draw all stay on
                     # device, derived from the step's single fold_in key
-                    def _spec_sampled_step(p, t, c_, keff, key):
-                        logits, c2, ckpt = model.spec_verify(
-                            p, {"tokens": t}, c_, ccfg)
-                        a, tok = spec_sample_accept(
-                            logits, t[:, 1:], keff, key,
-                            scfg.temperature, scfg.top_k)
-                        return a, tok, pin(c2), ckpt
+                    if self.paged:
+                        def _spec_sampled_step(p, t, c_, bt, keff, key):
+                            logits, c2, ckpt = model.spec_verify(
+                                p, {"tokens": t, "block_table": bt}, c_, ccfg)
+                            a, tok = spec_sample_accept(
+                                logits, t[:, 1:], keff, key,
+                                scfg.temperature, scfg.top_k)
+                            return a, tok, pin(c2), ckpt
+                    else:
+                        def _spec_sampled_step(p, t, c_, keff, key):
+                            logits, c2, ckpt = model.spec_verify(
+                                p, {"tokens": t}, c_, ccfg)
+                            a, tok = spec_sample_accept(
+                                logits, t[:, 1:], keff, key,
+                                scfg.temperature, scfg.top_k)
+                            return a, tok, pin(c2), ckpt
 
                     self._spec_sample_fn = jax.jit(_spec_sampled_step,
                                                    donate_argnums=(2,))
             if scfg.temperature > 0.0:
                 # on-device sampling for the batched grid: decode + categorical
                 # draw fused in one jitted step (no per-step host vocab copy)
-                def _sampled_step(p, t, c_, key):
-                    logits, c2 = model.decode_step(p, {"tokens": t}, c_, ccfg)
-                    return _sample_tokens(logits[:, -1], key, scfg.temperature,
-                                          scfg.top_k), pin(c2)
+                if self.paged:
+                    def _sampled_step(p, t, c_, bt, key):
+                        logits, c2 = model.decode_step(
+                            p, {"tokens": t, "block_table": bt}, c_, ccfg)
+                        return _sample_tokens(logits[:, -1], key,
+                                              scfg.temperature,
+                                              scfg.top_k), pin(c2)
+                else:
+                    def _sampled_step(p, t, c_, key):
+                        logits, c2 = model.decode_step(p, {"tokens": t}, c_, ccfg)
+                        return _sample_tokens(logits[:, -1], key, scfg.temperature,
+                                              scfg.top_k), pin(c2)
                 self._sample_fn = jax.jit(_sampled_step, donate_argnums=(2,))
         else:
             self._cache_len = scfg.max_len
@@ -597,6 +716,124 @@ class ServeEngine:
             if self.slots[i] is None and i != staged:
                 return i
         return None
+
+    # ------------------------------------------------------ page management
+    def _bt_dev(self) -> jax.Array:
+        """Device copy of the host block-table mirror (pushed every step —
+        it is a few KB, and host-owned so allocation stays plain Python)."""
+        return jnp.asarray(self._bt)
+
+    def _alloc_page(self) -> int:
+        """One page off the pool, enforcing the eviction watermark first.
+
+        Under prefix caching, pool pressure above the watermark evicts LRU
+        tree-only pages; a genuinely full pool force-evicts one more. With
+        the default pool sizing this never raises (slots can always fill)."""
+        if self.prefix is not None:
+            self.prefix.maybe_evict(self._watermark_pages)
+            if self.pool.free_pages == 0:
+                self.prefix.evict(1)
+        return self.pool.alloc()
+
+    def _cow_page(self, src: int) -> Optional[int]:
+        """Radix-cache COW hook: clone physical page ``src`` for a stream
+        that diverges mid-page. No eviction here — the tree is mid-walk and
+        the LRU victim could be ``src`` itself; a full pool just skips the
+        partial-page match (colder, still correct)."""
+        if self.pool.free_pages == 0:
+            return None
+        dst = self.pool.alloc()
+        self.cache = self._copy_fn(self.cache, jnp.int32(src), jnp.int32(dst))
+        return dst
+
+    def _ensure_pages(self, slot: int, n_tokens: int):
+        """Back the slot's first ``n_tokens`` rows with physical pages."""
+        ps = self._page_size
+        needed = min(-(-n_tokens // ps), self._blocks_per_slot)
+        pages = self._slot_pages[slot]
+        while len(pages) < needed:
+            pg = self._alloc_page()
+            self._bt[slot, len(pages)] = pg
+            pages.append(pg)
+
+    def _release_slot_pages(self, slot: int):
+        """Drop the slot's page refs and point its table at the trash page
+        (row 0) so any stale in-flight write/read for this slot is inert.
+        Pages the radix tree still holds stay resident for future hits."""
+        for pg in self._slot_pages[slot]:
+            self.pool.release(pg)
+        self._slot_pages[slot] = []
+        self._bt[slot, :] = 0
+
+    def _admit_paged(self):
+        """Paged admission: prefill the unshared prompt suffix directly into
+        the resident grid (no staging cache, no slot write).
+
+        With the prefix cache on, the radix tree resolves the longest cached
+        prefix first: matched pages go straight into the slot's block table
+        (refcount bump — shared pages are past every write frontier, so
+        they are read-only by construction), ``pos`` is reset to the matched
+        length, and ONLY the unshared suffix is prefilled — and only the
+        suffix is charged against ``token_budget``. The extend runs over
+        the full grid with a per-slot ``n_valid`` vector (only the staging
+        slot is nonzero); resident streams' rows land above their ``pos``
+        (mask-invalid garbage, overwritten when those streams advance) or
+        in the trash page, so their decode is untouched — admission stays
+        token-exact with the dense engine's staging-cache path."""
+        budget = self.scfg.token_budget or 1 << 30
+        spent = 0
+        while spent < budget:
+            if self._staging is None:
+                slot = self._free_slot()
+                if slot is None:
+                    return
+                req = self._pop_admittable()
+                if req is None:
+                    return
+                req.admitted_at = self.clock.now()
+                self._admission_waits.append(req.admitted_at - req.created_at)
+                matched = 0
+                assert not self._slot_pages[slot]
+                if self.prefix is not None:
+                    m = self.prefix.match(req.prompt)
+                    self._slot_pages[slot] = list(m.pages)
+                    self._bt[slot, :len(m.pages)] = m.pages
+                    matched = m.matched
+                    self._prefix_hits += m.hit_full
+                    self._prefix_lookups += len(req.prompt)
+                self.cache = self._reset_pos_fn(self.cache, jnp.int32(slot),
+                                                jnp.int32(matched))
+                self._staging = _Staging(req, None, matched, slot)
+            st = self._staging
+            prompt = st.req.prompt
+            chunk = self.scfg.prefill_chunk or len(prompt)
+            logits = None
+            while st.consumed < len(prompt) and spent < budget:
+                n = min(chunk, len(prompt) - st.consumed)
+                self._ensure_pages(st.slot, st.consumed + n)
+                toks = np.zeros((self.scfg.max_batch, chunk), np.int32)
+                toks[st.slot, :n] = prompt[st.consumed:st.consumed + n]
+                nv = np.zeros((self.scfg.max_batch,), np.int32)
+                nv[st.slot] = n
+                logits, self.cache = self._extend_fn(
+                    self.params, jnp.asarray(toks), self.cache,
+                    self._bt_dev(), jnp.asarray(nv))
+                st.consumed += n
+                spent += n                  # unshared suffix only
+            if st.consumed < len(prompt):
+                return                      # budget exhausted mid-prompt
+            nxt = self._pick(logits[st.slot, -1])
+            self._commit_token(st.req, nxt)
+            self.slots[st.slot] = st.req
+            if self.prefix is not None:
+                # publish the freshly prefilled full pages for future hits
+                self.prefix.insert(prompt, self._slot_pages[st.slot])
+            if self.spec:
+                self._spec_ctx[st.slot] = (
+                    st.req.prompt.tolist()
+                    + st.req.tokens_out[st.req.prompt_carried:])
+            self._staging = None
+            self._retire_if_done(st.req, st.slot, nxt)
 
     def _admit_batched(self):
         """Spend up to ``token_budget`` prompt tokens on (chunked) prefill."""
@@ -664,7 +901,9 @@ class ServeEngine:
                 self._retire_if_done(req, i, nxt)
 
     def _admit(self):
-        if self.batched:
+        if self.paged:
+            self._admit_paged()
+        elif self.batched:
             self._admit_batched()
         else:
             self._admit_slotwise()
@@ -714,23 +953,31 @@ class ServeEngine:
             req.finished_at = self.clock.now()
             self._retired.append(req)
             self.slots[i] = None
+            if self.paged:
+                self._release_slot_pages(i)
             if not self.batched:
                 self.caches[i] = None
 
     def _decode_batched(self, active: List[int]) -> int:
         toks = np.zeros((self.scfg.max_batch, 1), np.int32)
         for i in active:
-            toks[i, 0] = self.slots[i].tokens_out[-1]
+            req = self.slots[i]
+            toks[i, 0] = req.tokens_out[-1]
+            if self.paged:
+                # the pending token writes at row used-1; back it with a page
+                self._ensure_pages(i, len(req.prompt) + len(req.tokens_out)
+                                   - req.prompt_carried)
+        bt = (self._bt_dev(),) if self.paged else ()
         if self.scfg.temperature <= 0.0:
             logits, self.cache = self._decode_fn(self.params, jnp.asarray(toks),
-                                                 self.cache)
+                                                 self.cache, *bt)
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         else:
             # on-device sampling: one fused decode+categorical dispatch; the
             # per-row Gumbel noise is positional (a function of key + slot
             # index), so active rows never depend on garbage-slot contents
             sampled, self.cache = self._sample_fn(self.params, jnp.asarray(toks),
-                                                  self.cache,
+                                                  self.cache, *bt,
                                                   self._next_sample_key())
             nxt = np.asarray(sampled)
         produced = 0
@@ -772,17 +1019,25 @@ class ServeEngine:
             toks[i, 1:], keff[i] = ngram_propose(
                 np.asarray(ctx[-self.scfg.ngram_lookback:], np.int32),
                 k, self.scfg.ngram_max)
+            if self.paged:
+                # the verify chunk writes rows used-1 .. used-1+K; rows past
+                # the slot's capacity land in the trash page, matching the
+                # dense path's headroom semantics
+                req = self.slots[i]
+                self._ensure_pages(i, len(req.prompt) + len(req.tokens_out)
+                                   - req.prompt_carried + k)
+        bt = (self._bt_dev(),) if self.paged else ()
         if self._sampled:
             # ONE counter draw per engine step (the plain sampled step's
             # discipline); accept/resample/bonus randomness derives from it
             a_dev, fin_dev, self.cache, ckpt = self._spec_sample_fn(
-                self.params, jnp.asarray(toks), self.cache,
+                self.params, jnp.asarray(toks), self.cache, *bt,
                 jnp.asarray(keff), self._next_sample_key())
             acc = np.asarray(a_dev)
             fin = np.asarray(fin_dev)
         else:
             logits, self.cache, ckpt = self._verify_fn(
-                self.params, jnp.asarray(toks), self.cache)
+                self.params, jnp.asarray(toks), self.cache, *bt)
             greedy = np.asarray(jnp.argmax(logits, axis=-1))  # (B, K+1)
         keep = np.zeros(self.scfg.max_batch, np.int32)
         produced = 0
@@ -895,6 +1150,7 @@ class ServeEngine:
         assert self.batched, "decode_step_hlo requires the batched engine"
         # a real (uncommitted) token array mirrors what step() dispatches,
         # so the lowered cell is exactly the serving computation
+        bt = (self._bt_dev(),) if self.paged else ()
         if which == "verify":
             assert self.spec, "verify HLO requires draft_len > 0"
             toks = jnp.zeros((self.scfg.max_batch, self._draft_len + 1), jnp.int32)
@@ -903,17 +1159,17 @@ class ServeEngine:
                     keff = jnp.zeros((self.scfg.max_batch,), jnp.int32)
                     key = jax.random.fold_in(self._sample_key, 0)
                     return (self._spec_sample_fn
-                            .lower(self.params, toks, self.cache, keff, key)
+                            .lower(self.params, toks, self.cache, *bt, keff, key)
                             .compile().as_text())
-                return (self._verify_fn.lower(self.params, toks, self.cache)
+                return (self._verify_fn.lower(self.params, toks, self.cache, *bt)
                         .compile().as_text())
         toks = jnp.zeros((self.scfg.max_batch, 1), jnp.int32)
         with self._sharded_scope():
             if self.scfg.temperature > 0.0:
                 key = jax.random.fold_in(self._sample_key, 0)
-                return (self._sample_fn.lower(self.params, toks, self.cache, key)
+                return (self._sample_fn.lower(self.params, toks, self.cache, *bt, key)
                         .compile().as_text())
-            return (self._decode_fn.lower(self.params, toks, self.cache)
+            return (self._decode_fn.lower(self.params, toks, self.cache, *bt)
                     .compile().as_text())
 
     # ------------------------------------------------------------- failover
@@ -923,6 +1179,8 @@ class ServeEngine:
         emitted tokens (idempotent regenerate), so nothing else to save."""
         req = self.slots[i]
         self.slots[i] = None
+        if self.paged:
+            self._release_slot_pages(i)
         if not self.batched:
             self.caches[i] = None
         return req
@@ -931,6 +1189,8 @@ class ServeEngine:
         """Evict every resident/staging request (replica death path)."""
         out = [r for r in (self.evict(i) for i in self._active()) if r is not None]
         if self._staging is not None:
+            if self.paged:
+                self._release_slot_pages(self._staging.slot)
             out.append(self._staging.req)
             self._staging = None
         return out
@@ -967,12 +1227,16 @@ class ServeEngine:
     @property
     def effective_mode(self) -> str:
         """The decode path this engine ACTUALLY runs (downgrades included):
-        '{spec|batched|slotwise}-{greedy|sampled}[-fused]'. Benches and
-        tests assert on this instead of trusting the requested config."""
+        '{spec|batched|slotwise}-{greedy|sampled}[-fused][-paged]'. Benches
+        and tests assert on this instead of trusting the requested config."""
         decode = ("spec" if self.spec
                   else "batched" if self.batched else "slotwise")
         mode = f"{decode}-{'sampled' if self._sampled else 'greedy'}"
-        return f"{mode}-fused" if self.fused else mode
+        if self.fused:
+            mode += "-fused"
+        if self.paged:
+            mode += "-paged"
+        return mode
 
     @staticmethod
     def latency_percentiles(requests) -> dict:
@@ -1011,6 +1275,17 @@ class ServeEngine:
             "tp_policy": self.tp_policy if self.mesh is not None else None,
             "spec": self.spec,
             "fused": self.fused,
+            "paged": self.paged,
+            "page_size": self._page_size if self.paged else 0,
+            "prefix_cache": self.prefix is not None,
+            "prefix_hits": self._prefix_hits,
+            "prefix_lookups": self._prefix_lookups,
+            # fraction of submitted prompt tokens served from resident pages
+            "prefix_hit_rate": (self._prefix_hits / self._prefix_lookups
+                                if self._prefix_lookups else 0.0),
+            "pages_in_use": self.pool.pages_in_use if self.paged else 0,
+            "pages_total": self.pool.num_pages - 1 if self.paged else 0,
+            "evictions": self.prefix.evictions if self.prefix is not None else 0,
             "draft_len": self._draft_len,
             "draft_tokens_accepted": self._accepted_drafts,
             # mean drafted tokens accepted per (slot, step); +1 bonus token

@@ -162,12 +162,21 @@ class SLORouter:
         not exclusions."""
         recs = self.results()
         shed_uids = {r.uid for r in self.shed}
-        rejected = sum(e.metrics()["requests_rejected"]
-                       for e in self.replicas.engines)
+        em = [e.metrics() for e in self.replicas.engines]
+        rejected = sum(m["requests_rejected"] for m in em)
         slo = [r for r in recs if r.slo_ttft_s > 0.0]
         attained = [r for r in slo if r.first_token_at > 0.0
                     and r.first_token_at - r.created_at <= r.slo_ttft_s]
+        # prefix-cache counters aggregate across replicas (each replica owns
+        # its own page pool and radix tree — hits are per-replica locality)
+        phits = sum(m["prefix_hits"] for m in em)
+        plook = sum(m["prefix_lookups"] for m in em)
         return {
+            "prefix_hits": phits,
+            "prefix_lookups": plook,
+            "prefix_hit_rate": (phits / plook) if plook else 0.0,
+            "pages_in_use": sum(m["pages_in_use"] for m in em),
+            "evictions": sum(m["evictions"] for m in em),
             **ServeEngine.latency_percentiles(recs),
             "requests_offered": self._offered,
             "requests_finished": sum(1 for r in recs

@@ -103,6 +103,16 @@ class TrafficConfig:
     deadline_s: float = 0.0           # admission deadline: shed if not yet
                                       # dispatched this long after arrival
                                       # (0 = never shed)
+    # --- shared-system-prompt mixture (prefix-cache workloads) ---
+    # A fraction of requests open with one of ``n_shared_prefixes`` fixed
+    # token prefixes of ``shared_prefix_len`` tokens (drawn once per trace)
+    # followed by their unique suffix — the multi-tenant "same system
+    # prompt, different user turn" shape the radix prefix cache exists for.
+    # Tagged requests carry ``prefix_id`` so benchmarks can split warm
+    # (prefix already resident) from cold TTFT. 0 disables the mixture.
+    shared_prefix_len: int = 0        # tokens in each shared prefix
+    n_shared_prefixes: int = 1        # distinct shared prefixes in the pool
+    shared_fraction: float = 1.0      # probability a request is tagged
     seed: int = 0
 
 
@@ -147,13 +157,28 @@ def poisson_trace(cfg: TrafficConfig) -> List[Arrival]:
                              cfg.prompt_mix)
     olens = _mixture_lengths(rng, cfg.n_requests, cfg.output_lens,
                              cfg.output_mix)
+    # shared-prefix pool: drawn AFTER the base draws (and only when the
+    # mixture is on), so traces without it are byte-identical to before
+    prefixes, tags = [], np.full(cfg.n_requests, -1, np.int64)
+    if cfg.shared_prefix_len > 0:
+        assert cfg.n_shared_prefixes >= 1
+        prefixes = [rng.integers(0, cfg.vocab,
+                                 cfg.shared_prefix_len).astype(np.int32)
+                    for _ in range(cfg.n_shared_prefixes)]
+        shared = rng.random(cfg.n_requests) < cfg.shared_fraction
+        tags = np.where(shared,
+                        rng.integers(0, cfg.n_shared_prefixes,
+                                     cfg.n_requests), -1)
     trace = []
     for i in range(cfg.n_requests):
+        prompt = rng.integers(0, cfg.vocab, int(plens[i])).astype(np.int32)
+        if tags[i] >= 0:
+            prompt = np.concatenate([prefixes[int(tags[i])], prompt])
         req = Request(uid=i,
-                      prompt=rng.integers(0, cfg.vocab,
-                                          int(plens[i])).astype(np.int32),
+                      prompt=prompt,
                       max_new_tokens=int(olens[i]),
                       slo_ttft_s=cfg.slo_ttft_s,
-                      deadline_s=cfg.deadline_s)
+                      deadline_s=cfg.deadline_s,
+                      prefix_id=int(tags[i]))
         trace.append(Arrival(at_s=float(at[i]), request=req))
     return trace

@@ -170,3 +170,57 @@ def test_report_fused_table_tolerates_missing_bound_fields():
     assert len(row) == 1
     assert "0.00" in row[0] and "100.0" in row[0] and "80.0" in row[0]
     assert report.fused_lines([{"mode": "batched"}]) == []
+
+
+def test_report_load_tolerates_prefix_row_keys(tmp_path):
+    """The paged/prefix rows add keys (prefix_hit_rate, ttft_warm_p50_s,
+    prefix_probe shape) no earlier loader knew about; load() must keep
+    keying them by (arch, shape) without complaint."""
+    sys.path.insert(0, REPO)
+    from benchmarks import report
+
+    p = tmp_path / "serving.json"
+    p.write_text(json.dumps([
+        {"arch": "a1", "shape": "prefix_probe", "mode": "paged",
+         "status": "ok", "prefix_hit_rate": 0.5, "ttft_cold_s": 0.06,
+         "ttft_warm_s": 0.02},
+        {"arch": "a1", "shape": "serve_decode_b2", "mode": "paged",
+         "status": "ok", "pages_in_use": 12, "page_size": 16},
+    ]))
+    d = report.load(str(p))
+    assert ("a1", "prefix_probe") in d
+    assert d[("a1", "prefix_probe")]["prefix_hit_rate"] == 0.5
+
+
+def test_report_prefix_table_renders_both_sources():
+    """prefix_lines joins serving prefix_probe rows with *-prefix traffic
+    rows; rows missing any new key render dashes, never KeyError."""
+    sys.path.insert(0, REPO)
+    from benchmarks import report
+
+    serving = [
+        {"shape": "prefix_probe", "family": "transformer", "prefix_len": 64,
+         "ttft_cold_s": 0.0639, "ttft_warm_s": 0.0199,
+         "prefix_hit_rate": 0.38, "pages_in_use": 12, "evictions": 0},
+        {"shape": "serve_decode_b2", "mode": "batched"},   # not a prefix row
+    ]
+    traffic = [
+        {"mode": "traffic-virtual-prefix", "family": "transformer",
+         "shared_prefix_len": 64, "ttft_cold_p50_s": 0.0191,
+         "ttft_warm_p50_s": 0.0168, "prefix_hit_rate": 0.749,
+         "pages_in_use": 27, "evictions": 0},
+        {"mode": "traffic-virtual", "family": "transformer"},  # no prefix keys
+    ]
+    lines = report.prefix_lines(serving, traffic)
+    probe = [l for l in lines if l.startswith("| probe")]
+    traf = [l for l in lines if l.startswith("| traffic")]
+    assert len(probe) == 1 and len(traf) == 1
+    assert "63.9" in probe[0] and "19.9" in probe[0] and "3.21x" in probe[0]
+    assert "19.1" in traf[0] and "16.8" in traf[0] and "virtual" in traf[0]
+    # a traffic row missing the warm/cold keys but tagged -prefix still
+    # renders (as dashes) rather than KeyError-ing
+    lines2 = report.prefix_lines([], [{"mode": "traffic-wall-prefix"}])
+    assert any("| traffic (wall)" in l and "—" in l for l in lines2)
+    # and with no prefix rows anywhere the table is absent entirely
+    assert report.prefix_lines([{"mode": "batched"}],
+                               [{"mode": "traffic-virtual"}]) == []

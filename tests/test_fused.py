@@ -127,6 +127,31 @@ def test_fused_downgrades_on_slotwise_path(fp4_transformer):
     assert not eng.effective_mode.endswith("-fused")
 
 
+def test_fused_ssm_dispatches_decode_kernel(monkeypatch):
+    """The fused SSD decode path actually routes through ops.ssd_decode
+    (the scan kernel at s = chunk = 1 carrying the slot states), not the
+    eager jnp recurrence — and the jnp engine never touches the kernel.
+    Token parity for the ssm family is covered by the parametrized greedy
+    test above; this pins the DISPATCH."""
+    from repro.kernels import ops
+
+    cfg, model, params = _fp4_load(registry.FAMILY_SMOKE["ssm"])
+    calls = {"n": 0}
+    real = ops.ssd_decode
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(ops, "ssd_decode", spy)
+    eng, _ = _serve(model, params, cfg, fused=True, max_new=4, n_req=1)
+    assert eng.fused and not eng.downgrades
+    assert calls["n"] > 0, "fused ssm decode never dispatched the kernel"
+    calls["n"] = 0
+    _serve(model, params, cfg, fused=False, max_new=4, n_req=1)
+    assert calls["n"] == 0, "jnp engine must not touch the kernel path"
+
+
 def test_fused_metrics_flag(fp4_transformer):
     cfg, model, params = fp4_transformer
     eng, _ = _serve(model, params, cfg, fused=True, max_new=2, n_req=1)

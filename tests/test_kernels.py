@@ -207,3 +207,76 @@ def test_decode_attention_streaming_fully_masked_block():
     ref = ops.decode_attention_ref(q, k, v, valid)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD decode through the scan kernel (fused serving dispatch)
+# ---------------------------------------------------------------------------
+
+def _ssd_decode_inputs(b, h, p, g, n, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(keys[0], (b, 1, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, 1, h)))
+    A = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    B = jax.random.normal(keys[3], (b, 1, g, n)) * 0.3
+    C = jax.random.normal(keys[4], (b, 1, g, n)) * 0.3
+    D = jnp.ones((h,))
+    state = jax.random.normal(keys[5], (b, h, p, n)) * 0.2
+    return x, dt, A, B, C, D, state
+
+
+@pytest.mark.parametrize("b,h,p,g,n", [(2, 4, 8, 2, 16), (1, 2, 16, 1, 8),
+                                       (3, 6, 4, 3, 4)])
+def test_ssd_decode_matches_jitted_step(b, h, p, g, n):
+    """ops.ssd_decode (the scan kernel at s = chunk = 1 with carried slot
+    states) vs the JITTED jnp decode step — jit vs jit, because XLA
+    contracts a*b+c into FMA under jit but not in eager op-by-op dispatch,
+    so the eager form is the one with different numerics, not the kernel.
+    Agreement is near-machine-epsilon here (XLA's per-shape fusion choices
+    keep strict bitwise from being a universal guarantee); the serving
+    contract — TOKEN-exact fused-vs-jnp streams — is gated end-to-end in
+    tests/test_fused.py."""
+    from repro.models.ssm import ssd_decode_step
+
+    x, dt, A, B, C, D, state = _ssd_decode_inputs(b, h, p, g, n, seed=h + n)
+    ref_fn = jax.jit(ssd_decode_step)
+    for _ in range(4):                       # carry the state a few steps
+        y, ns = ops.ssd_decode(x, dt, A, B, C, D, state)
+        y_ref, ns_ref = ref_fn(x, dt, A, B, C, D, state)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ns), np.asarray(ns_ref),
+                                   atol=1e-6, rtol=1e-6)
+        state = ns
+
+
+def test_ssd_scan_carry_splits_at_chunk_boundary():
+    """ssd_scan_pallas's carry extension: running the second half with the
+    first half's returned state is bit-identical to the unsplit run (the
+    kernel is sequential over chunks, so a chunk-aligned split changes no
+    reduction order), and a zero initial state reproduces the original
+    cold-start path exactly."""
+    from repro.kernels.ssd_scan import ssd_scan_pallas
+
+    bh, s, p, n, chunk = 3, 64, 8, 4, 16
+    keys = jax.random.split(jax.random.PRNGKey(9), 5)
+    x = jax.random.normal(keys[0], (bh, s, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (bh, s)))
+    A = -jnp.exp(jax.random.normal(keys[2], (bh,)) * 0.3)
+    B = jax.random.normal(keys[3], (bh, s, n)) * 0.3
+    C = jax.random.normal(keys[4], (bh, s, n)) * 0.3
+    D = jnp.ones((bh,))
+    y_cold = ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    zeros = jnp.zeros((bh, p, n), jnp.float32)
+    y_z, fin = ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk, interpret=True,
+                               initial_state=zeros, return_final_state=True)
+    assert bool(jnp.all(y_z == y_cold))
+    half = s // 2
+    y1, s1 = ssd_scan_pallas(x[:, :half], dt[:, :half], A, B[:, :half],
+                             C[:, :half], D, chunk=chunk, interpret=True,
+                             initial_state=zeros, return_final_state=True)
+    y2, s2 = ssd_scan_pallas(x[:, half:], dt[:, half:], A, B[:, half:],
+                             C[:, half:], D, chunk=chunk, interpret=True,
+                             initial_state=s1, return_final_state=True)
+    assert bool(jnp.all(jnp.concatenate([y1, y2], axis=1) == y_cold))
+    assert bool(jnp.all(s2 == fin))
