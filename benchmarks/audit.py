@@ -1,0 +1,219 @@
+"""Serving-contract audit CLI: repo lint + the full audit_engine matrix.
+
+Runs both halves of ``repro.analysis`` and writes one JSON file
+(``results/audit.json``, rendered by ``benchmarks/report.py``):
+
+* **lint** — the AST rules over ``src/repro`` (``analysis/lint.py``).
+* **cells** — ``analysis.contract.audit_engine`` over every constructed
+  step closure, across family × {dense, fused, paged} × {single-device,
+  mesh}. Unsupported combinations are not silently skipped: the engine is
+  still constructed and the cell records the downgrade it warned about
+  (``status: "downgraded"``), so "this combination was never checked"
+  is itself a checked fact. Audited single-device cells also serve a tiny
+  trace first and run the ``analysis.retrace`` compile-count guard
+  (``--no-retrace`` to skip; mesh cells skip it by default — an 8-virtual-
+  device trace is all compile time).
+
+Engines are built with ``temperature > 0`` and ``draft_len > 0`` so EVERY
+closure materializes (decode, extend, write, verify, rewind, sample,
+spec_sample, plus the paged page ops). Exit status 1 on any unallowlisted
+error finding — the CI ``static-analysis`` leg gates on it.
+
+Known limitations (measured facts the engine never promised, kept VISIBLE
+as allowlisted findings rather than silently relaxed — see
+``docs/analysis.md``):
+
+* griffin × mesh: GSPMD full-rematerialization on the ring cache drops
+  buffer aliasing (donation findings allowlisted for that cell).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.audit [--mesh 4x2] \
+        [--families transformer moe] [--modes dense fused paged] \
+        [--host-devices 8] [--out results/audit.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import warnings
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# (check, family, placement) patterns whose findings are allowlisted with
+# a reason; keep this table SHORT and documented — every entry is a debt
+KNOWN_LIMITATIONS = (
+    {"check": "donation", "family": "griffin", "placement": "mesh",
+     "reason": "GSPMD full-remat on the ring cache under mesh drops "
+               "aliasing (tracked in ROADMAP)"},
+)
+
+
+def _mark_known(cell: dict, findings) -> None:
+    for f in findings:
+        for k in KNOWN_LIMITATIONS:
+            if (f.check == k["check"] and cell["family"] == k["family"]
+                    and cell["placement"] == k["placement"]
+                    and not f.allowlisted):
+                f.allowlisted = True
+                f.detail += f" [known limitation: {k['reason']}]"
+
+
+def _build_engine(arch: str, mode: str, mesh, tp_policy: str):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import cascade
+    from repro.core.cascade import CascadeConfig
+    from repro.models import registry
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg, model = registry.load(arch, smoke=True)
+    train_ccfg = CascadeConfig(mode="train", compute_dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0), train_ccfg)
+    ccfg = train_ccfg
+    if mode == "fused":
+        ccfg = CascadeConfig(mode="serve_fp4", compute_dtype=jnp.float32)
+        params = cascade.tree_to_serve_fp4(params, ccfg)
+    scfg = ServeConfig(max_batch=8 if mesh is not None else 4, max_len=48,
+                       temperature=0.7, draft_len=2, prefill_chunk=8,
+                       tp_policy=tp_policy, fused=(mode == "fused"),
+                       prefix_cache=(mode == "paged"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng = ServeEngine(model, params, ccfg, scfg, mesh=mesh)
+    return cfg, eng
+
+
+def _trace(cfg, eng, n_requests: int = 6) -> None:
+    """Serve a tiny trace so every hot closure dispatches (and would
+    retrace if shapes leaked)."""
+    import numpy as np
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        eng.submit(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+            max_new_tokens=6))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        while eng.busy():
+            eng.step()
+
+
+def run_cell(family: str, arch: str, mode: str, placement: str, mesh,
+             tp_policy: str, retrace_on: bool) -> dict:
+    """One matrix cell: construct, verify mode actually engaged (or record
+    the downgrade), trace + retrace, then lower + audit every closure."""
+    from repro.analysis import contract, retrace
+
+    cell = {"family": family, "arch": arch, "mode": mode,
+            "placement": placement, "tp_policy": tp_policy,
+            "status": "audited", "downgrades": [], "closures": {},
+            "findings": []}
+    cfg, eng = _build_engine(arch, mode, mesh, tp_policy)
+    cell["downgrades"] = list(eng.downgrades)
+    engaged = {"dense": True, "fused": eng.fused, "paged": eng.paged}[mode]
+    if not engaged:
+        # the combination downgraded at construction — record WHY (the
+        # warn-once message) so a silently-skipped cell cannot exist
+        cell["status"] = "downgraded"
+        return cell
+    findings = []
+    if retrace_on:
+        _trace(cfg, eng)
+        findings.extend(retrace.retrace_findings(
+            eng, require_dispatched=("extend",)))
+    res = contract.audit_engine(eng)
+    findings.extend(res["findings"])
+    _mark_known(cell, findings)
+    cell["closures"] = res["closures"]
+    cell["contract"] = res["contract"]
+    cell["findings"] = [f.to_dict() for f in findings]
+    return cell
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repo lint + serving-contract audit matrix")
+    ap.add_argument("--families", nargs="*", default=None,
+                    help="registry families to audit (default: all four)")
+    ap.add_argument("--modes", nargs="*",
+                    default=["dense", "fused", "paged"],
+                    choices=["dense", "fused", "paged"])
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="also audit mesh cells on a (data, model) mesh, "
+                         "e.g. 4x2 (needs the devices; see --host-devices)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N virtual CPU devices (before first jax use)")
+    ap.add_argument("--tp-policy", default="cascade",
+                    choices=["cascade", "megatron"])
+    ap.add_argument("--no-retrace", action="store_true",
+                    help="skip the trace + compile-count guard")
+    ap.add_argument("--no-lint", action="store_true")
+    ap.add_argument("--out", default="results/audit.json")
+    args = ap.parse_args(argv)
+
+    from repro.launch import mesh as meshlib
+    if args.host_devices:
+        meshlib.force_host_device_count(args.host_devices)
+
+    from repro.analysis.findings import Finding, format_findings, gating
+    from repro.analysis.lint import lint_paths
+    from repro.models.registry import FAMILY_SMOKE
+
+    out = {"lint": [], "cells": [], "summary": {}}
+    all_findings = []
+
+    if not args.no_lint:
+        lint_findings = lint_paths(["src/repro"], base=REPO)
+        out["lint"] = [f.to_dict() for f in lint_findings]
+        all_findings.extend(lint_findings)
+        print(f"lint: {len(lint_findings)} finding(s), "
+              f"{len(gating(lint_findings))} gating")
+
+    families = args.families or list(FAMILY_SMOKE)
+    placements = [("single", None)]
+    if args.mesh:
+        placements.append(("mesh", meshlib.make_serving_mesh(args.mesh)))
+
+    for placement, mesh in placements:
+        for family in families:
+            arch = FAMILY_SMOKE[family]
+            for mode in args.modes:
+                retrace_on = (not args.no_retrace) and placement == "single"
+                cell = run_cell(family, arch, mode, placement, mesh,
+                                args.tp_policy, retrace_on)
+                out["cells"].append(cell)
+                fs = [Finding.from_dict(d) for d in cell["findings"]]
+                all_findings.extend(fs)
+                g = len(gating(fs))
+                print(f"{family}/{mode}/{placement}: {cell['status']}, "
+                      f"{len(cell['closures'])} closure(s), "
+                      f"{len(fs)} finding(s), {g} gating")
+                if g:
+                    print(format_findings(gating(fs)))
+
+    bad = gating(all_findings)
+    out["summary"] = {
+        "cells": len(out["cells"]),
+        "audited": sum(1 for c in out["cells"] if c["status"] == "audited"),
+        "downgraded": sum(1 for c in out["cells"]
+                          if c["status"] == "downgraded"),
+        "findings": len(all_findings),
+        "gating": len(bad),
+    }
+    outp = Path(args.out)
+    if not outp.is_absolute():
+        outp = REPO / outp
+    outp.parent.mkdir(parents=True, exist_ok=True)
+    outp.write_text(json.dumps(out, indent=2, default=str))
+    print(f"wrote {outp} — {out['summary']}")
+    if bad:
+        print(f"\nAUDIT FAILED: {len(bad)} unallowlisted finding(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

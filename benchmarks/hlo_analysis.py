@@ -1,216 +1,18 @@
-"""Structural HLO analysis for the roofline (§Roofline).
-
-``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
-empirically), which would undercount scanned-layer models by n_layers. This
-module parses ``compiled.as_text()`` into a computation call graph, reads
-``known_trip_count`` off every while op, and propagates multiplicities to:
-
-* dot FLOPs (2 * prod(out_shape) * prod(contracted lhs dims)), and
-* collective bytes (output tensor bytes per op, per device),
-
-giving loop-corrected per-device totals. Convolution/elementwise FLOPs are
-ignored (dots dominate every assigned arch).
+"""Import shim: the HLO parser moved to ``repro.analysis.hlo`` so the
+serving-contract auditor (``repro.analysis.contract``) can use it without
+depending on benchmarks/. Existing callers keep importing from here.
 """
-from __future__ import annotations
-
-import dataclasses
-import math
-import re
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f4e2m1fn": 1, "s4": 1, "u4": 1,
-}
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{\s*$")
-_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],\{\}]+))\s+([\w\-]+)\((.*)$")
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
-_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
-_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\)|[\w\[\],\{\}]+))")
-
-
-def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
-    out = []
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        out.append((dt, [int(d) for d in dims.split(",") if d]))
-    return out
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _shape_dims(type_str):
-        if dt in _DTYPE_BYTES:
-            total += math.prod(dims) * _DTYPE_BYTES[dt] if dims else _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclasses.dataclass
-class Instr:
-    name: str
-    type_str: str
-    op: str
-    rest: str
-
-
-@dataclasses.dataclass
-class Computation:
-    name: str
-    params: Dict[str, str]
-    instrs: List[Instr]
-
-
-def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
-    comps: Dict[str, Computation] = {}
-    entry = None
-    cur: Optional[Computation] = None
-    for raw in text.splitlines():
-        m = _COMP_RE.match(raw)
-        if m:
-            is_entry, name, params_str, _ = m.groups()
-            params = {}
-            for pm in _PARAM_RE.finditer(params_str):
-                params[pm.group(1)] = pm.group(2)
-            cur = Computation(name=name, params=params, instrs=[])
-            comps[name] = cur
-            if is_entry:
-                entry = name
-            continue
-        if cur is None:
-            continue
-        if raw.strip() == "}":
-            cur = None
-            continue
-        im = _INSTR_RE.match(raw)
-        if im:
-            cur.instrs.append(Instr(*im.groups()))
-    return comps, entry
-
-
-def _multiplicities(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
-    """computation name -> times executed per program run."""
-    mult: Dict[str, float] = defaultdict(float)
-
-    def visit(name: str, m: float, stack=()):
-        if name not in comps or name in stack:
-            return
-        mult[name] += m
-        for ins in comps[name].instrs:
-            trip = 1.0
-            if ins.op == "while":
-                tm = _TRIP_RE.search(ins.rest)
-                trip = float(tm.group(1)) if tm else 1.0
-            refs = _CALL_RE.findall(ins.rest)
-            for i, (kw_match, target) in enumerate(
-                    [(k.group(0), k.group(1)) for k in _CALL_RE.finditer(ins.rest)]):
-                child_m = m
-                if kw_match.startswith("body="):
-                    child_m = m * trip
-                elif kw_match.startswith("condition="):
-                    child_m = m * (trip + 1)
-                visit(target, child_m, stack + (name,))
-
-    visit(entry, 1.0)
-    return dict(mult)
-
-
-def analyze(text: str) -> dict:
-    """Loop-corrected per-device dot FLOPs + collective bytes."""
-    comps, entry = parse_computations(text)
-    if entry is None:
-        raise ValueError("no ENTRY computation found")
-    mult = _multiplicities(comps, entry)
-
-    dot_flops = 0.0
-    dot_flops_uncorrected = 0.0
-    coll = {c: {"count": 0.0, "bytes": 0.0, "bytes_uncorrected": 0.0} for c in _COLLECTIVES}
-
-    for cname, comp in comps.items():
-        m = mult.get(cname, 0.0)
-        if m == 0.0:
-            continue
-        # symbol table: instruction/param name -> type string
-        sym: Dict[str, str] = dict(comp.params)
-        for ins in comp.instrs:
-            sym[ins.name] = ins.type_str
-        for ins in comp.instrs:
-            if ins.op == "dot":
-                out_dims = _shape_dims(ins.type_str)
-                out_elems = math.prod(out_dims[0][1]) if out_dims and out_dims[0][1] else 1
-                ops = _OPERANDS_RE.findall(ins.rest)
-                cd = _CDIMS_RE.search(ins.rest)
-                k = 1
-                if ops and cd is not None and ops[0] in sym:
-                    lhs_dims = _shape_dims(sym[ops[0]])
-                    if lhs_dims and lhs_dims[0][1]:
-                        for d in cd.group(1).split(","):
-                            if d:
-                                k *= lhs_dims[0][1][int(d)]
-                f = 2.0 * out_elems * k
-                dot_flops += m * f
-                dot_flops_uncorrected += f
-            else:
-                base = None
-                for c in _COLLECTIVES:
-                    if ins.op == c or ins.op == c + "-start":
-                        base = c
-                        break
-                if base is not None:
-                    b = _type_bytes(ins.type_str)
-                    coll[base]["count"] += m
-                    coll[base]["bytes"] += m * b
-                    coll[base]["bytes_uncorrected"] += b
-
-    total_coll = sum(v["bytes"] for v in coll.values())
-    return {
-        "dot_flops": dot_flops,
-        "dot_flops_uncorrected": dot_flops_uncorrected,
-        "collectives": coll,
-        "collective_bytes": total_coll,
-    }
-
-
-def partial_sum_allreduces(text: str) -> dict:
-    """Count all-reduce ops whose combiner is an ADD — partial-sum traffic,
-    the quantity CASCADE abolishes (paper Sections 2.2, 13.5).
-
-    An all-reduce's reduction computation is named by ``to_apply=``; a
-    combiner CONTAINING an ``add`` accumulates partial products (max/min/or
-    combiners — argmax lowerings, mask folds — are not partial sums and are
-    ignored). Containment rather than root-op equality matters for variadic
-    all-reduces (XLA's combiner pass merges several into one op whose
-    combiner ROOTs a ``tuple`` of adds), and the async ``-start`` forms of
-    both all-reduce and reduce-scatter are counted — a gate must
-    over-approximate, never false-negative. Returns
-    ``{"count", "bytes", "ops": [(name, bytes), ...]}`` over EVERY
-    computation in the module, loop bodies included — the serving assertion
-    is "zero partial-sum all-reduce anywhere in the decode step", so no
-    multiplicity weighting is needed.
-    """
-    comps, _ = parse_computations(text)
-    out = {"count": 0, "bytes": 0, "ops": []}
-    for comp in comps.values():
-        for ins in comp.instrs:
-            if ins.op not in ("all-reduce", "all-reduce-start",
-                              "reduce-scatter", "reduce-scatter-start"):
-                continue
-            target = None
-            for kw in _CALL_RE.finditer(ins.rest):
-                if kw.group(0).startswith("to_apply="):
-                    target = kw.group(1)
-                    break
-            combiner_adds = (target in comps and
-                             any(i.op == "add" for i in comps[target].instrs))
-            if combiner_adds:
-                b = _type_bytes(ins.type_str)
-                out["count"] += 1
-                out["bytes"] += b
-                out["ops"].append((f"{comp.name}/{ins.name}", b))
-    return out
+from repro.analysis.hlo import (  # noqa: F401
+    _COLLECTIVES,
+    _DTYPE_BYTES,
+    _multiplicities,
+    Computation,
+    Instr,
+    analyze,
+    collective_budget,
+    donation_aliases,
+    dtype_audit,
+    host_transfers,
+    parse_computations,
+    partial_sum_allreduces,
+)

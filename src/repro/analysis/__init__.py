@@ -1,0 +1,16 @@
+"""Static analysis of the serving system: the compiled-program auditor
+(``hlo``, ``contract``, ``retrace``) and the source lint (``lint``).
+
+Entry points:
+
+* ``contract.audit_engine(engine)`` — lower + check every jitted step
+  closure of a constructed ``ServeEngine`` against its serving contract.
+* ``retrace.retrace_findings(engine)`` — compile-count guard after a
+  served trace (each closure compiles exactly once).
+* ``lint.lint_paths(roots)`` — AST rules over the source tree.
+* ``benchmarks/audit.py`` — the CLI that runs all of it across the
+  family × mode × placement matrix and writes ``results/audit.json``.
+
+See ``docs/analysis.md`` for the invariant → checker → gate table.
+"""
+from repro.analysis.findings import Finding, format_findings, gating  # noqa: F401

@@ -1,0 +1,205 @@
+"""The serving contract, applied to every jitted step closure.
+
+``ServingContract`` declares the structural properties a compiled serving
+step must have — the paper's architectural claims plus the invariants
+PRs 1–9 accreted in prose:
+
+* every stacked-cache donation is honored (``donation_aliases``; a dropped
+  donation silently doubles KV HBM),
+* no host round-trip inside a step (``host_transfers``; a step is ONE
+  device dispatch),
+* no forbidden dtypes, and packed (u8 codes+scales) weight params on the
+  serve_fp4 path (``dtype_audit``; a densified tree is the bug FP4 serving
+  exists to avoid),
+* collectives within a declared budget, zero partial-sum all-reduces under
+  the cascade policy (``collective_budget``; paper Sections 2.2/13.5).
+
+``audit_engine(engine)`` AOT-lowers every closure the engine constructed
+(``engine.step_closures()`` — decode/extend/write/verify/rewind/sample/
+spec_sample plus the paged page ops) against the live params/cache
+placement and returns structured findings plus per-closure stats. AOT
+lowering never touches the jit dispatch cache, so auditing composes with
+the ``analysis.retrace`` compile-count guard run on the same engine.
+
+Backend honesty: buffer donation is probed (``donation_supported``) — the
+oldest pinned jax drops CPU donations with a warning, and a check that
+cannot run must surface as an INFO finding, not a silent pass. Likewise the
+FP4 dot-dtype story: interpret-mode Pallas kernels legitimately dequantize
+to float inside the step on CPU, so the packed-weight contract is checked
+on the ENTRY signature (see ``hlo.dtype_audit``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+from repro.analysis import hlo
+from repro.analysis.findings import Finding
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingContract:
+    """What a compiled serving step is allowed to look like.
+
+    ``None`` caps mean uncapped; ``max_partial_sum_allreduces=0`` is the
+    cascade-policy default (the paper's headline invariant)."""
+    donated_cache: bool = True
+    # leaves smaller than this are advisory for the donation check: tiny
+    # position vectors may legitimately be recomputed (e.g. rewind derives
+    # pos from the checkpoint) instead of aliased. Keep the floor well
+    # below leaf_bytes / mesh_devices — alias sizes are per-shard.
+    donation_min_bytes: int = 1024
+    # closures whose cache update is in-place by construction (fixed
+    # slot-grid writes), where every major leaf MUST alias. ``extend``
+    # (griffin's ring normalization materializes fresh buffers) and
+    # ``rewind`` (recurrent families restore wholesale from per-position
+    # checkpoints — PR 3's design) donate best-effort: aliases show up in
+    # stats, their absence does not gate.
+    strict_donation_closures: Tuple[str, ...] = (
+        "decode", "sample", "write", "verify", "spec_sample",
+        "copy_page", "reset_pos")
+    forbid_host_transfers: bool = True
+    forbid_dtypes: Tuple[str, ...] = ("f64",)
+    require_packed_weights: bool = False
+    max_partial_sum_allreduces: Optional[int] = 0
+    # the zero-partial-sum claim (paper 2.2/13.5) covers the decode-path
+    # dispatches. Chunked prefill writes batch-1 staging state under a
+    # replicated placement, which lowers masked-add all-reduces the
+    # cascade activation discipline does not (yet) eliminate — measured
+    # fact surfaced by this auditor, recorded in stats, tracked in
+    # ROADMAP; exempt from the gate so it cannot silently regress into
+    # the decode step instead.
+    psum_exempt_closures: Tuple[str, ...] = ("extend",)
+    max_collective_counts: Optional[Dict[str, float]] = None
+    max_collective_bytes: Optional[float] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def default_contract(engine) -> ServingContract:
+    """The contract the engine's own configuration promises: packed weights
+    iff it serves FP4, zero partial-sum all-reduces iff the cascade policy
+    placed the params (megatron is the measured baseline that HAS them)."""
+    return ServingContract(
+        require_packed_weights=(engine.ccfg.mode == "serve_fp4"),
+        max_partial_sum_allreduces=(0 if engine.tp_policy == "cascade"
+                                    else None),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def donation_supported() -> bool:
+    """Whether this backend honors buffer donation. CPU donation landed in
+    newer jaxlib only; the pinned oldest CI version drops it with a warning.
+    Probed once per process by compiling a trivially aliasable identity —
+    when False, donation findings downgrade to info (check skipped, and the
+    report says so)."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        text = f.lower(jnp.zeros((8,), jnp.float32)).compile().as_text()
+    return "input_output_alias" in text
+
+
+def audit_step(name: str, text: str, contract: ServingContract, *,
+               donates_cache: bool = True, takes_params: bool = True,
+               cache_leaves: int = 0, cache_major_leaves: int = 0) -> Tuple[dict, list]:
+    """Apply the contract to one lowered step's HLO text. Returns
+    ``(stats, findings)``. Pure text-in — usable on stored HLO dumps.
+    ``cache_major_leaves`` counts the donated leaves at or above the
+    contract's ``donation_min_bytes`` floor (the KV planes); each must
+    have an alias entry of at least that size."""
+    findings = []
+    al = hlo.donation_aliases(text)
+    ht = hlo.host_transfers(text)
+    da = hlo.dtype_audit(text, forbid=contract.forbid_dtypes)
+    cb = hlo.collective_budget(
+        text, max_counts=contract.max_collective_counts,
+        max_bytes=contract.max_collective_bytes,
+        max_partial_sum=(None if name in contract.psum_exempt_closures
+                         else contract.max_partial_sum_allreduces))
+    stats = {
+        "donation_aliases": al["count"],
+        "cache_leaves": cache_leaves if donates_cache else 0,
+        "host_transfers": ht["count"],
+        "packed_params": da["packed_params"],
+        "float_params": da["float_params"],
+        "dot_dtypes": da["dot_dtypes"],
+        "partial_sum_allreduces": cb["partial_sum"]["count"],
+        "collective_bytes": cb["collective_bytes"],
+    }
+    if (contract.donated_cache and donates_cache and cache_leaves > 0
+            and name in contract.strict_donation_closures):
+        major_aliases = sum(1 for a in al["aliases"]
+                            if a["bytes"] >= contract.donation_min_bytes)
+        if not donation_supported():
+            findings.append(Finding(
+                "donation", name, "buffer donation is not implemented on "
+                "this backend — donation check skipped", level="info"))
+        elif major_aliases < cache_major_leaves:
+            findings.append(Finding(
+                "donation", name,
+                f"only {major_aliases}/{cache_major_leaves} donated cache "
+                f"leaves >= {contract.donation_min_bytes}B were aliased to "
+                f"outputs — each dropped donation keeps input AND output "
+                f"cache copies live (2x KV HBM)"))
+    if contract.forbid_host_transfers:
+        for where, what in ht["ops"]:
+            findings.append(Finding(
+                "host-transfer", f"{name}:{where}",
+                f"host round-trip {what!r} inside a serving step — the "
+                f"step must be one pure device dispatch"))
+    for where, dt in da["forbidden"]:
+        findings.append(Finding(
+            "dtype", f"{name}:{where}", f"forbidden dtype {dt} in a "
+            f"serving step"))
+    if contract.require_packed_weights and takes_params \
+            and da["packed_params"] == 0:
+        findings.append(Finding(
+            "dtype", name,
+            "no packed (u8 codes/scales) weight parameter in a serve_fp4 "
+            "step — the weight tree was densified before dispatch"))
+    for what, got, cap in cb["violations"]:
+        findings.append(Finding(
+            "collective-budget", name, f"{what}: {got:g} over budget "
+            f"{cap:g}"))
+    return stats, findings
+
+
+def audit_engine(engine, contract: Optional[ServingContract] = None) -> dict:
+    """Lower + audit every step closure of a constructed engine.
+
+    Returns ``{"contract", "closures": {name: stats}, "findings"}`` with
+    ``findings`` a list of ``Finding`` (JSON-ready via ``to_dict``). The
+    caller decides gating (``findings.gating``); info-level findings record
+    checks that could not run on this backend.
+    """
+    import jax
+    contract = contract or default_contract(engine)
+    if not getattr(engine, "batched", False):
+        return {"contract": contract.to_dict(), "closures": {},
+                "findings": [Finding(
+                    "audit", "engine", "slot-wise engine has no jitted "
+                    "step registry to audit", level="info")]}
+    leaves = jax.tree_util.tree_leaves(engine.cache)
+    n_leaves = len(leaves)
+    n_major = sum(1 for l in leaves
+                  if l.size * l.dtype.itemsize >= contract.donation_min_bytes)
+    closures: Dict[str, dict] = {}
+    out_findings = []
+    for name, entry in engine.step_closures().items():
+        text = engine.lower_step(name).as_text()
+        stats, fs = audit_step(
+            name, text, contract, donates_cache=entry["donates_cache"],
+            takes_params=entry["takes_params"], cache_leaves=n_leaves,
+            cache_major_leaves=n_major)
+        closures[name] = stats
+        out_findings.extend(fs)
+    return {"contract": contract.to_dict(), "closures": closures,
+            "findings": out_findings}

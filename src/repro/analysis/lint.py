@@ -1,0 +1,211 @@
+"""Repo lint: established serving invariants as named AST rules.
+
+The HLO auditor (``analysis/contract.py``) checks the compiled program;
+this half checks the SOURCE for contracts that never reach HLO:
+
+* ``time-read``        — no direct ``time.*`` reads (or ``time`` imports)
+                         in ``serve/`` outside ``traffic.py``. The PR-8
+                         clock contract: every serving-path latency number
+                         reads the injected ``Clock``, so traffic tests
+                         replay deterministically under ``VirtualClock``.
+* ``host-sync-in-jit`` — no ``np.*`` / ``.item()`` / ``device_get`` on
+                         traced values inside a function passed to
+                         ``jax.jit``: a host sync inside a step closure
+                         either crashes under tracing or silently fences
+                         the dispatch pipeline.
+* ``jax-config-global``— no process-global ``jax.config.update`` outside
+                         designated (allowlisted) sites; a stray flag flip
+                         re-bases RNG streams / numerics for every other
+                         engine in the process.
+* ``pallas-interpret`` — every ``pl.pallas_call`` site must thread an
+                         ``interpret=`` kwarg, so each kernel stays
+                         reachable in interpret mode (the CPU-exact parity
+                         path every kernel test relies on).
+
+Findings carry ``file:line``. Allowlist a site by putting
+``# lint: allow[rule-name] — reason`` on the flagged line or the line
+directly above it; allowlisted findings stay visible in reports but do not
+gate. Run as ``python -m repro.analysis.lint [root ...]`` (default:
+``src/repro``); exits 1 on unallowlisted findings.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding, format_findings, gating
+
+RULES = {
+    "time-read": "serve/ reads the injected Clock, never time.* directly "
+                 "(traffic.py owns the one wall-clock shim)",
+    "host-sync-in-jit": "no np.*/.item()/device_get on traced values "
+                        "inside jit-closure bodies",
+    "jax-config-global": "no process-global jax.config mutation outside "
+                         "designated sites",
+    "pallas-interpret": "every pl.pallas_call site threads interpret=",
+}
+
+_HOST_NP_NAMES = ("np", "numpy")
+
+
+def _allowed(rule: str, lines: List[str], lineno: int) -> bool:
+    """``# lint: allow[rule]`` on the flagged line or the line above."""
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and f"lint: allow[{rule}]" in lines[ln - 1]:
+            return True
+    return False
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name) and node.value.id == "jax")
+
+
+def _jit_targets(tree: ast.AST):
+    """Yield the AST nodes whose bodies run under jax.jit tracing: lambdas
+    passed to ``jax.jit(...)``, local functions passed by name, and
+    functions decorated with ``@jax.jit`` / ``@functools.partial(jax.jit,
+    ...)``. Cross-module references cannot be resolved statically and are
+    skipped."""
+    local_fns: Dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            local_fns[node.name] = node
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func) and node.args:
+            tgt = node.args[0]
+            if isinstance(tgt, ast.Lambda):
+                yield tgt
+            elif isinstance(tgt, ast.Name) and tgt.id in local_fns:
+                yield local_fns[tgt.id]
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_jax_jit(dec):
+                    yield node
+                elif (isinstance(dec, ast.Call) and dec.args
+                      and isinstance(dec.func, ast.Attribute)
+                      and dec.func.attr == "partial"
+                      and _is_jax_jit(dec.args[0])):
+                    yield node
+
+
+def _host_sync_hits(fn_node: ast.AST):
+    """(lineno, what) for host-sync calls inside one jit-closure body."""
+    body = fn_node.body if isinstance(fn_node.body, list) else [fn_node.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+                    and f.value.id in _HOST_NP_NAMES):
+                yield node.lineno, f"host numpy call {f.value.id}.{f.attr}()"
+            elif isinstance(f, ast.Attribute) and f.attr == "item":
+                yield node.lineno, ".item() host sync"
+            elif ((isinstance(f, ast.Attribute) and f.attr == "device_get")
+                  or (isinstance(f, ast.Name) and f.id == "device_get")):
+                yield node.lineno, "device_get host sync"
+
+
+def lint_source(src: str, rel: str) -> List[Finding]:
+    """Lint one file's source. ``rel`` is the repo-relative posix path used
+    both for findings and for path-scoped rules."""
+    try:
+        tree = ast.parse(src, filename=rel)
+    except SyntaxError as e:
+        return [Finding("parse", f"{rel}:{e.lineno or 0}",
+                        f"unparseable: {e.msg}")]
+    lines = src.splitlines()
+    findings: List[Finding] = []
+
+    def add(rule: str, lineno: int, detail: str):
+        findings.append(Finding(rule, f"{rel}:{lineno}", detail,
+                                allowlisted=_allowed(rule, lines, lineno)))
+
+    in_serve = "serve/" in rel and not rel.endswith("traffic.py")
+    if in_serve:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                if any(a.name == "time" for a in node.names):
+                    add("time-read", node.lineno,
+                        "serve/ imports time — read the injected Clock")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "time":
+                    add("time-read", node.lineno,
+                        "serve/ imports from time — read the injected Clock")
+            elif (isinstance(node, ast.Attribute)
+                  and isinstance(node.value, ast.Name)
+                  and node.value.id == "time"):
+                add("time-read", node.lineno,
+                    f"direct time.{node.attr} read in serve/ — latency "
+                    f"numbers must come from the injected Clock")
+
+    seen = set()
+    for fn in _jit_targets(tree):
+        if id(fn) in seen:          # decorated AND referenced by name
+            continue
+        seen.add(id(fn))
+        for lineno, what in _host_sync_hits(fn):
+            add("host-sync-in-jit", lineno,
+                f"{what} inside a jit-closure body")
+
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "update"
+                and isinstance(node.func.value, ast.Attribute)
+                and node.func.value.attr == "config"
+                and isinstance(node.func.value.value, ast.Name)
+                and node.func.value.value.id == "jax"):
+            add("jax-config-global", node.lineno,
+                "process-global jax.config.update outside a designated "
+                "(allowlisted) site")
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "pallas_call"):
+            has_interpret = any(kw.arg == "interpret" or kw.arg is None
+                                for kw in node.keywords)
+            if not has_interpret:
+                add("pallas-interpret", node.lineno,
+                    "pl.pallas_call without interpret= — the kernel is "
+                    "unreachable in interpret mode (CPU parity path)")
+    return findings
+
+
+def lint_paths(roots=("src/repro",),
+               base: Optional[Path] = None) -> List[Finding]:
+    """Lint every ``*.py`` under the given roots (repo-relative unless
+    absolute). Findings are sorted by location."""
+    base = Path(base) if base is not None else Path.cwd()
+    findings: List[Finding] = []
+    for root in roots:
+        rootp = Path(root)
+        if not rootp.is_absolute():
+            rootp = base / rootp
+        files = [rootp] if rootp.is_file() else sorted(rootp.rglob("*.py"))
+        for f in files:
+            try:
+                rel = f.relative_to(base).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            findings.extend(lint_source(f.read_text(), rel))
+    findings.sort(key=lambda f: f.where)
+    return findings
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    roots = args or ["src/repro"]
+    findings = lint_paths(roots)
+    print(format_findings(findings))
+    bad = gating(findings)
+    if bad:
+        print(f"\n{len(bad)} unallowlisted finding(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

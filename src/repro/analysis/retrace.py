@@ -1,0 +1,68 @@
+"""Compile-count guard: each step closure compiles exactly once per trace.
+
+The whole point of fixed-shape serving (stacked cache, chunked prefill,
+padded token grids — PR 1) is ONE compile per closure for any workload; a
+retrace mid-trace is a silent multi-second stall that per-request latency
+percentiles smear into mush. This guard reads each jitted closure's
+dispatch-cache size after a full serving trace:
+
+* ``> max_compiles``  — a retrace happened: some dispatch saw a new shape/
+  dtype/sharding. Error finding naming the closure.
+* ``== 0``            — the closure was never dispatched; the guard
+  verified nothing for it. Info finding (honest, not silent).
+
+``jitfn._cache_size()`` is private jax API; when absent the guard reports
+an info finding per closure instead of pretending to pass. AOT lowering
+(``engine.lower_step`` / ``contract.audit_engine``) does NOT populate the
+dispatch cache, so run the trace first, snapshot, then audit — order does
+not actually matter, but the trace must precede THIS check.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+from repro.analysis.findings import Finding
+
+
+def compile_counts(engine) -> Dict[str, int]:
+    """Dispatch-cache sizes per step closure; -1 when the private
+    ``_cache_size`` API is unavailable on this jax version."""
+    out: Dict[str, int] = {}
+    for name, entry in engine.step_closures().items():
+        sz = getattr(entry["fn"], "_cache_size", None)
+        try:
+            out[name] = int(sz()) if callable(sz) else -1
+        except Exception:
+            out[name] = -1
+    return out
+
+
+def retrace_findings(engine, max_compiles: int = 1,
+                     require_dispatched: Iterable[str] = ()) -> List[Finding]:
+    """Findings over a traced engine's compile counts.
+
+    ``require_dispatched`` names closures the caller KNOWS the trace
+    exercised (e.g. ``decode``/``extend`` on any non-empty trace) — zero
+    compiles there upgrades the info finding to an error, because the
+    guard silently verifying nothing is itself a contract violation.
+    """
+    required = set(require_dispatched)
+    findings: List[Finding] = []
+    for name, n in compile_counts(engine).items():
+        if n < 0:
+            findings.append(Finding(
+                "retrace", name, "jit cache size unavailable on this jax — "
+                "retrace guard skipped", level="info"))
+        elif n > max_compiles:
+            findings.append(Finding(
+                "retrace", name,
+                f"compiled {n}x over the trace (expected <= {max_compiles})"
+                f" — a shape/dtype/sharding leaked into dispatch; every "
+                f"extra compile is a silent multi-second stall"))
+        elif n == 0:
+            findings.append(Finding(
+                "retrace", name,
+                "never dispatched over the trace — the retrace guard "
+                "verified nothing for this closure",
+                level="error" if name in required else "info"))
+    return findings

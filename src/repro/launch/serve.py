@@ -14,6 +14,10 @@ slot-sharded caches; token-exact with the single-device run):
 carries the partial-sum all-reduces CASCADE abolishes — compare with
 ``--verify-hlo``, which prints the partial-sum all-reduce count of the
 compiled decode step and fails if a cascade-policy step has any).
+
+``--audit`` runs the full serving-contract auditor (repro.analysis) over
+every step closure of the engine as configured — the launcher-local slice
+of what ``python -m benchmarks.audit`` checks matrix-wide in CI.
 """
 from __future__ import annotations
 
@@ -76,6 +80,13 @@ def main():
     ap.add_argument("--verify-hlo", action="store_true",
                     help="print the decode step's partial-sum all-reduce "
                          "count; exit 1 if a cascade-policy step has any")
+    ap.add_argument("--audit", action="store_true",
+                    help="audit EVERY jitted step closure of the "
+                         "constructed engine against the serving contract "
+                         "(donation, host transfers, dtypes, collective "
+                         "budget — repro.analysis.contract) and exit 1 on "
+                         "any error finding; composes with --mesh/--fused/"
+                         "--prefix-cache to audit exactly what would serve")
     ap.add_argument("--traffic", action="store_true",
                     help="live-traffic demo: route a seeded open-loop "
                          "Poisson trace (--rate, --requests arrivals) over "
@@ -170,6 +181,23 @@ def main():
         print("--verify-hlo requires the batched engine; this model fell "
               "back to the slot-wise path, nothing was verified")
         raise SystemExit(2)
+    if args.audit:
+        from repro.analysis import contract, format_findings, gating
+        res = contract.audit_engine(eng)
+        for name, st in res["closures"].items():
+            print(f"audit {name}: aliases={st['donation_aliases']} "
+                  f"host_xfer={st['host_transfers']} "
+                  f"psum_ar={st['partial_sum_allreduces']} "
+                  f"packed_params={st['packed_params']}")
+        bad = gating(res["findings"])
+        if res["findings"]:
+            print(format_findings(res["findings"]))
+        print(f"audit: {len(res['closures'])} closure(s), "
+              f"{len(res['findings'])} finding(s), {len(bad)} gating")
+        if bad:
+            print("SERVING CONTRACT VIOLATED", flush=True)
+            raise SystemExit(1)
+
     if args.verify_hlo:
         try:
             from benchmarks import hlo_analysis

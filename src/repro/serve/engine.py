@@ -94,7 +94,7 @@ import contextlib
 import dataclasses
 import warnings
 from collections import deque
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -374,6 +374,10 @@ class ServeEngine:
                 "point differ from the legacy lowering's; distributions and "
                 "seed-determinism are unaffected", RuntimeWarning,
                 stacklevel=3)
+            # the designated site: sampled engines REQUIRE one shared
+            # process-global threefry lowering (sharded-vs-unsharded
+            # parity), and the flip warns just above
+            # lint: allow[jax-config-global] — designated global-config site
             jax.config.update("jax_threefry_partitionable", True)
         # ONE on-device RNG discipline for every sampling site (batched grid,
         # admission, slot-wise loop): draw i uses fold_in(PRNGKey(seed), i),
@@ -532,8 +536,13 @@ class ServeEngine:
                 self._copy_fn = jax.jit(
                     lambda c_, s_, d_: model.paged_copy_page(c_, s_, d_),
                     donate_argnums=(0,))
-                self._reset_pos_fn = jax.jit(reset_slot_pos,
-                                             donate_argnums=(0,))
+                # a fresh lambda per engine (like _copy_fn above): jitting
+                # the bare module-level function would share one tracing
+                # cache across engines, breaking per-engine donation and
+                # the retrace guard's compile accounting
+                self._reset_pos_fn = jax.jit(
+                    lambda c_, s_, p_: reset_slot_pos(c_, s_, p_),
+                    donate_argnums=(0,))
                 if scfg.prefix_cache:
                     self.prefix = RadixPrefixCache(self.pool, ps,
                                                    copy_page=self._cow_page)
@@ -1131,6 +1140,95 @@ class ServeEngine:
             self._decode_tokens += produced
             return produced
 
+    # ----------------------------------------------------- contract auditor
+    def step_closures(self) -> Dict[str, dict]:
+        """Every jitted step closure this engine constructed, by name:
+        ``{"fn", "donates_cache", "takes_params"}`` — the registry
+        ``repro.analysis.contract.audit_engine`` lowers and audits, and
+        ``analysis.retrace`` reads compile counts from. Built on demand
+        (by ``getattr`` over the mode-dependent attributes) so it is
+        always in sync with what ``__init__`` actually constructed."""
+        assert self.batched, "step closures exist only on the batched engine"
+        reg: Dict[str, dict] = {}
+
+        def _add(name, attr, donates_cache=True, takes_params=True):
+            fn = getattr(self, attr, None)
+            if fn is not None:
+                reg[name] = {"fn": fn, "donates_cache": donates_cache,
+                             "takes_params": takes_params}
+
+        _add("decode", "_decode_fn")
+        _add("extend", "_extend_fn")
+        _add("write", "_write_fn", takes_params=False)
+        _add("verify", "_verify_fn")
+        _add("rewind", "_rewind_fn", takes_params=False)
+        _add("spec_sample", "_spec_sample_fn")
+        _add("sample", "_sample_fn")
+        _add("copy_page", "_copy_fn", takes_params=False)
+        _add("reset_pos", "_reset_pos_fn", takes_params=False)
+        if getattr(getattr(self.model, "cfg", None), "vocab", 0):
+            _add("pick", "_pick_fn", donates_cache=False, takes_params=False)
+        return reg
+
+    def _step_example_args(self, name: str) -> tuple:
+        """Arguments shaped exactly like what ``step()`` dispatches for one
+        named closure, for AOT lowering. Token grids are zeros (values are
+        irrelevant to the lowered program); the live params/cache carry
+        their real placement, so a mesh engine lowers the real sharded
+        step. The rewind checkpoint comes from ``eval_shape`` over the
+        verify closure — shape-faithful without running a verify pass
+        (which would consume the donated cache)."""
+        B = self.scfg.max_batch
+        bt = (self._bt_dev(),) if self.paged else ()
+        key = jax.random.fold_in(self._sample_key, 0)
+        if name == "decode":
+            return (self.params, jnp.zeros((B, 1), jnp.int32),
+                    self.cache) + bt
+        if name == "sample":
+            return (self.params, jnp.zeros((B, 1), jnp.int32),
+                    self.cache) + bt + (key,)
+        if name in ("verify", "spec_sample"):
+            toks = jnp.zeros((B, self._draft_len + 1), jnp.int32)
+            if name == "verify":
+                return (self.params, toks, self.cache) + bt
+            return (self.params, toks, self.cache) + bt \
+                + (jnp.zeros((B,), jnp.int32), key)
+        if name == "extend":
+            chunk = self.scfg.prefill_chunk or self.scfg.max_len
+            if self._chunk_cap:
+                chunk = min(chunk, self._chunk_cap)
+            if self.paged:
+                return (self.params, jnp.zeros((B, chunk), jnp.int32),
+                        self.cache) + bt + (jnp.zeros((B,), jnp.int32),)
+            staging = self.model.init_cache(
+                1, self._cache_len, dtype=self.ccfg.resolved_kv_dtype)
+            return (self.params, jnp.zeros((1, chunk), jnp.int32), staging,
+                    jnp.int32(chunk))
+        if name == "write":
+            staging = self.model.init_cache(
+                1, self._cache_len, dtype=self.ccfg.resolved_kv_dtype)
+            return (self.cache, staging, jnp.int32(0))
+        if name == "rewind":
+            ckpt = jax.eval_shape(self._verify_fn,
+                                  *self._step_example_args("verify"))[2]
+            return (self.cache, ckpt, jnp.zeros((B,), jnp.int32))
+        if name in ("copy_page", "reset_pos"):
+            return (self.cache, jnp.int32(0), jnp.int32(0))
+        if name == "pick":
+            vocab = int(self.model.cfg.vocab)
+            return (jnp.zeros((vocab,), jnp.float32), key)
+        raise KeyError(f"unknown step closure {name!r}")
+
+    def lower_step(self, name: str):
+        """AOT lower + compile one step closure against the live params/
+        cache placement; returns jax's compiled object (``.as_text()`` for
+        the HLO). AOT compilation does not touch the jit dispatch cache,
+        so auditing composes with the retrace guard."""
+        entry = self.step_closures()[name]
+        with self._sharded_scope():
+            args = self._step_example_args(name)
+            return entry["fn"].lower(*args).compile()
+
     def decode_step_hlo(self, which: str = "decode") -> str:
         """Compiled HLO of a batched serving step against the live params/
         cache placement — the executable form of the paper's interconnect
@@ -1148,29 +1246,12 @@ class ServeEngine:
         unused greedy ones.
         """
         assert self.batched, "decode_step_hlo requires the batched engine"
-        # a real (uncommitted) token array mirrors what step() dispatches,
-        # so the lowered cell is exactly the serving computation
-        bt = (self._bt_dev(),) if self.paged else ()
         if which == "verify":
             assert self.spec, "verify HLO requires draft_len > 0"
-            toks = jnp.zeros((self.scfg.max_batch, self._draft_len + 1), jnp.int32)
-            with self._sharded_scope():
-                if self._sampled:
-                    keff = jnp.zeros((self.scfg.max_batch,), jnp.int32)
-                    key = jax.random.fold_in(self._sample_key, 0)
-                    return (self._spec_sample_fn
-                            .lower(self.params, toks, self.cache, *bt, keff, key)
-                            .compile().as_text())
-                return (self._verify_fn.lower(self.params, toks, self.cache, *bt)
-                        .compile().as_text())
-        toks = jnp.zeros((self.scfg.max_batch, 1), jnp.int32)
-        with self._sharded_scope():
-            if self.scfg.temperature > 0.0:
-                key = jax.random.fold_in(self._sample_key, 0)
-                return (self._sample_fn.lower(self.params, toks, self.cache, *bt, key)
-                        .compile().as_text())
-            return (self._decode_fn.lower(self.params, toks, self.cache, *bt)
-                    .compile().as_text())
+            return self.lower_step(
+                "spec_sample" if self._sampled else "verify").as_text()
+        return self.lower_step(
+            "sample" if self._sampled else "decode").as_text()
 
     # ------------------------------------------------------------- failover
     def evict(self, i: int) -> Optional[Request]:

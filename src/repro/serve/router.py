@@ -31,7 +31,6 @@ IDENTICAL per-request TTFT/inter-token records; under the wall
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -124,10 +123,10 @@ class SLORouter:
                 # fleet idle: jump/sleep to the next scheduled event
                 nxt = min(([t0 + arrivals[0].at_s] if arrivals else [])
                           + ([kill_q[0][0]] if kill_q else []))
-                if hasattr(self.clock, "advance_to"):
-                    self.clock.advance_to(nxt)
-                else:
-                    time.sleep(max(0.0, nxt - self.clock.now()))
+                # clock-dual by protocol: the virtual clock jumps, the
+                # wall clock really sleeps (Clock.sleep_until — serve/
+                # never reads time.* directly)
+                self.clock.sleep_until(nxt)
             else:
                 return self.results()
         raise RuntimeError(f"trace did not drain in {max_steps} steps")

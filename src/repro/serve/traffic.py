@@ -40,18 +40,29 @@ import numpy as np
 # --------------------------------------------------------------------- clocks
 @runtime_checkable
 class Clock(Protocol):
-    """What the serving path needs from a time source: ``now()`` seconds.
+    """What the serving path needs from a time source: ``now()`` seconds,
+    and ``sleep_until(t)`` for idle gaps (the router parks on it between
+    scheduled events — a wall clock really sleeps, a virtual clock jumps).
 
     Monotone non-decreasing; the zero point is arbitrary (only differences
-    are ever used)."""
+    are ever used). Nothing in ``serve/`` outside this module may touch
+    ``time.*`` directly (enforced by ``repro.analysis.lint``'s
+    ``time-read`` rule), so deterministic traffic tests stay deterministic.
+    """
 
     def now(self) -> float: ...
+
+    def sleep_until(self, t: float) -> float: ...
 
 
 class MonotonicClock:
     """Wall-clock default: ``time.monotonic`` behind the protocol."""
 
     def now(self) -> float:
+        return time.monotonic()
+
+    def sleep_until(self, t: float) -> float:
+        time.sleep(max(0.0, t - time.monotonic()))
         return time.monotonic()
 
 
@@ -80,6 +91,10 @@ class VirtualClock:
         """Jump forward to ``t`` (no-op if ``t`` is in the past)."""
         self._t = max(self._t, float(t))
         return self._t
+
+    def sleep_until(self, t: float) -> float:
+        """Virtual sleep is a jump: no wall time passes."""
+        return self.advance_to(t)
 
 
 # ------------------------------------------------------------------ generator

@@ -224,3 +224,191 @@ def test_report_prefix_table_renders_both_sources():
     # and with no prefix rows anywhere the table is absent entirely
     assert report.prefix_lines([{"mode": "batched"}],
                                [{"mode": "traffic-virtual"}]) == []
+
+
+# ---------------------------------------------------------------------------
+# HLO parser corner cases (repro.analysis.hlo — benchmarks/hlo_analysis is
+# the import shim over it)
+# ---------------------------------------------------------------------------
+
+# hand-written module fragments exercising the exact syntax the checkers
+# key on; real lowerings around them are covered by test_audit.py
+_ASYNC_AR_HLO = """\
+HloModule m
+
+%add_comb (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %ars = f32[8] all-reduce-start(f32[8] %p0), to_apply=%add_comb
+  ROOT %ard = f32[8] all-reduce-done(f32[8] %ars)
+}
+"""
+
+
+def test_async_allreduce_start_done_counted_once():
+    """An async all-reduce appears as a -start/-done PAIR; both the
+    loop-corrected census and the partial-sum gate must count the pair as
+    ONE collective (the -start carries the combiner; double-counting would
+    fail budgets that are actually met)."""
+    from repro.analysis import hlo
+
+    r = hlo.analyze(_ASYNC_AR_HLO)
+    assert r["collectives"]["all-reduce"]["count"] == 1
+    assert r["collectives"]["all-reduce"]["bytes"] == 32  # f32[8], once
+    ps = hlo.partial_sum_allreduces(_ASYNC_AR_HLO)
+    assert ps["count"] == 1 and ps["bytes"] == 32
+
+
+def test_variadic_tuple_combiner_is_partial_sum():
+    """XLA's combiner pass merges several all-reduces into one variadic op
+    whose reduction computation ROOTs a tuple OF adds — containment, not
+    root-op equality, must classify it as a partial sum. A max combiner in
+    the same module stays unclassified (argmax lowerings are not partial
+    products)."""
+    from repro.analysis import hlo
+
+    text = """\
+HloModule m
+
+%var_comb (a0: f32[], b0: f32[], a1: f32[], b1: f32[]) -> (f32[], f32[]) {
+  %a0 = f32[] parameter(0)
+  %b0 = f32[] parameter(1)
+  %a1 = f32[] parameter(2)
+  %b1 = f32[] parameter(3)
+  %add.a = f32[] add(f32[] %a0, f32[] %a1)
+  %add.b = f32[] add(f32[] %b0, f32[] %b1)
+  ROOT %t = (f32[], f32[]) tuple(%add.a, %add.b)
+}
+
+%max_comb (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %max.1 = f32[] maximum(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (x: f32[16], y: f32[16]) -> (f32[16], f32[16]) {
+  %x = f32[16] parameter(0)
+  %y = f32[16] parameter(1)
+  %armax = f32[16] all-reduce(f32[16] %x), to_apply=%max_comb
+  ROOT %ar = (f32[16], f32[16]) all-reduce(f32[16] %x, f32[16] %y), to_apply=%var_comb
+}
+"""
+    ps = hlo.partial_sum_allreduces(text)
+    assert ps["count"] == 1, ps["ops"]           # the max combiner is not one
+    assert ps["bytes"] == 128                    # both tuple halves counted
+    assert ps["ops"][0][0].endswith("/ar")
+
+
+def test_while_without_known_trip_count_counts_body_once():
+    """A while op the compiler could not bound has no known_trip_count
+    attribute; the multiplicity walk must fall back to trip=1 (body once,
+    condition twice) rather than KeyError or drop the body's FLOPs — and
+    the same module WITH the attribute scales exactly by it."""
+    from repro.analysis import hlo
+
+    tmpl = """\
+HloModule m
+
+%body (p: (f32[4,4], f32[4,4])) -> (f32[4,4], f32[4,4]) {
+  %p = (f32[4,4], f32[4,4]) parameter(0)
+  %c = f32[4,4] get-tuple-element((f32[4,4], f32[4,4]) %p), index=0
+  %w = f32[4,4] get-tuple-element((f32[4,4], f32[4,4]) %p), index=1
+  %d = f32[4,4] dot(f32[4,4] %c, f32[4,4] %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %r = (f32[4,4], f32[4,4]) tuple(%d, %w)
+}
+
+%cond (p: (f32[4,4], f32[4,4])) -> pred[] {
+  %p = (f32[4,4], f32[4,4]) parameter(0)
+  ROOT %k = pred[] constant(false)
+}
+
+ENTRY %main (x: (f32[4,4], f32[4,4])) -> (f32[4,4], f32[4,4]) {
+  %x = (f32[4,4], f32[4,4]) parameter(0)
+  ROOT %w.1 = (f32[4,4], f32[4,4]) while((f32[4,4], f32[4,4]) %x), condition=%cond, body=%body{TRIP}
+}
+"""
+    body_flops = 2 * 4 * 4 * 4              # one 4x4 @ 4x4
+    unbounded = tmpl.replace("{TRIP}", "")
+    comps, entry = hlo.parse_computations(unbounded)
+    mult = hlo._multiplicities(comps, entry)
+    assert mult["body"] == 1.0 and mult["cond"] == 2.0
+    assert hlo.analyze(unbounded)["dot_flops"] == body_flops
+
+    bounded = tmpl.replace(
+        "{TRIP}", ', backend_config={"known_trip_count":{"n":"12"}}')
+    comps, entry = hlo.parse_computations(bounded)
+    mult = hlo._multiplicities(comps, entry)
+    assert mult["body"] == 12.0 and mult["cond"] == 13.0
+    assert hlo.analyze(bounded)["dot_flops"] == 12 * body_flops
+
+
+def test_hlo_shim_reexports_checkers():
+    """benchmarks/hlo_analysis stays importable with its full pre-move
+    surface — plus the new checkers — so stored scripts keep running."""
+    sys.path.insert(0, REPO)
+    from benchmarks import hlo_analysis
+    from repro.analysis import hlo
+
+    for name in ("analyze", "parse_computations", "partial_sum_allreduces",
+                 "donation_aliases", "host_transfers", "dtype_audit",
+                 "collective_budget", "_multiplicities"):
+        assert getattr(hlo_analysis, name) is getattr(hlo, name), name
+
+
+# ---------------------------------------------------------------------------
+# report.py: serving-contract audit table
+# ---------------------------------------------------------------------------
+
+def test_report_audit_table_renders_and_tolerates_sparse_cells():
+    """audit_lines renders the benchmarks/audit.py artifact; cells from
+    older runs may lack closures/findings/summary and must render dashes,
+    never KeyError. No artifact at all -> no table."""
+    sys.path.insert(0, REPO)
+    from benchmarks import report
+
+    data = {
+        "lint": [{"check": "jax-config-global", "where": "engine.py:381",
+                  "detail": "x", "level": "error", "allowlisted": True}],
+        "cells": [
+            {"family": "transformer", "mode": "dense", "placement": "single",
+             "status": "audited",
+             "closures": {"decode": {"donation_aliases": 3,
+                                     "host_transfers": 0,
+                                     "partial_sum_allreduces": 0}},
+             "findings": [{"check": "donation", "where": "decode",
+                           "detail": "d", "level": "error",
+                           "allowlisted": False}]},
+            {"family": "griffin", "mode": "paged", "placement": "single",
+             "status": "downgraded"},           # sparse legacy cell
+        ],
+        "summary": {"audited": 1, "downgraded": 1, "gating": 1},
+    }
+    lines = report.audit_lines(data)
+    tr = [l for l in lines if l.startswith("| transformer")]
+    gr = [l for l in lines if l.startswith("| griffin")]
+    assert len(tr) == 1 and len(gr) == 1
+    assert "| 1 | 3 | 0 | 0 | 1/0/0 |" in tr[0]
+    assert "downgraded" in gr[0] and "—" in gr[0]
+    assert any("0 gating, 1 allowlisted" in l for l in lines)
+    assert any("1 audited + 1 downgrade-verified" in l for l in lines)
+    assert report.audit_lines({}) == []
+    assert report.audit_lines({"cells": []}) == []
+
+
+def test_report_audit_data_tolerates_missing_and_broken_files(tmp_path):
+    sys.path.insert(0, REPO)
+    from benchmarks import report
+
+    assert report.audit_data(str(tmp_path / "nope.json")) == {}
+    p = tmp_path / "broken.json"
+    p.write_text("{not json")
+    assert report.audit_data(str(p)) == {}
+    p.write_text(json.dumps([1, 2, 3]))       # wrong top-level type
+    assert report.audit_data(str(p)) == {}
+    p.write_text(json.dumps({"cells": [], "lint": []}))
+    assert report.audit_data(str(p)) == {"cells": [], "lint": []}

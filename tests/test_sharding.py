@@ -294,6 +294,46 @@ def test_sampled_spec_verify_step_has_zero_partial_sum_allreduce(mesh):
     assert ar["count"] == 0, ar["ops"]
 
 
+def test_audit_engine_cascade_mesh_transformer_clean(mesh):
+    """The full serving-contract auditor over every closure of a sharded
+    cascade engine: zero gating findings (donation honored per shard, no
+    host transfers, no partial-sum ARs outside the exempted chunked
+    prefill)."""
+    from repro.analysis import contract
+    from repro.analysis.findings import gating
+    cfg, model = registry.load(registry.FAMILY_SMOKE["transformer"], smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    eng = ServeEngine(model, params, CCFG,
+                      _scfg(draft_len=2, temperature=0.7), mesh=mesh)
+    res = contract.audit_engine(eng)
+    assert gating(res["findings"]) == [], [
+        f.__dict__ for f in gating(res["findings"])]
+    for name in ("decode", "verify", "sample", "spec_sample"):
+        if name in res["closures"]:
+            assert res["closures"][name]["partial_sum_allreduces"] == 0, name
+
+
+def test_audit_engine_megatron_trips_partial_sum_gate(mesh):
+    """Contrast: hold the megatron baseline to the cascade contract
+    (max_partial_sum_allreduces=0) and the auditor must report
+    collective-budget findings on the decode-path closures — while the
+    engine's own default contract (megatron -> uncapped) stays quiet."""
+    from repro.analysis import contract
+    from repro.analysis.findings import gating
+    cfg, model = registry.load(registry.FAMILY_SMOKE["transformer"], smoke=True)
+    params = model.init_params(jax.random.PRNGKey(0), CCFG)
+    eng = ServeEngine(model, params, CCFG, _scfg(tp_policy="megatron"),
+                      mesh=mesh)
+    strict = contract.ServingContract(max_partial_sum_allreduces=0)
+    res = contract.audit_engine(eng, strict)
+    bad = [f for f in gating(res["findings"])
+           if f.check == "collective-budget"]
+    assert any(f.where == "decode" for f in bad), res["findings"]
+    assert res["closures"]["decode"]["partial_sum_allreduces"] > 0
+    # the default contract reads the engine's policy: megatron is uncapped
+    assert gating(contract.audit_engine(eng)["findings"]) == []
+
+
 def test_sampled_decode_step_has_zero_partial_sum_allreduce(mesh):
     """Sampling must not reintroduce partial-sum traffic: the FUSED sampled
     step (the computation a temperature>0 engine actually dispatches, and
